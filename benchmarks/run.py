@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [table1 table3 ...]
+
+Prints ``name,us_per_call,derived`` CSV.  Each module exposes
+``run() -> list[(name, us_per_call, derived)]``.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = ("table1_lattice", "table2_lm", "table3_opcounts",
+           "table4_timing", "table5_utilisation")
+
+
+def main() -> None:
+    selected = set(a.split("_")[0] for a in sys.argv[1:])
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if selected and mod_name.split("_")[0] not in selected:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.3f},{derived}")
+        except Exception as e:
+            failures += 1
+            print(f"{mod_name}.ERROR,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {mod_name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Table 5: memory utilisation % and KL(access || uniform).
+
+Runs MLM inference through a (briefly trained) LRAM model with
+`collect_access=True`: the weighted access histogram of the value table is
+accumulated from the REAL mid-network query stream — the paper's exact
+measurement (>98% of slots touched; KL ~ 1.6-2.5 nats).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs, data, optim
+from repro.launch.train import build_train_step
+from repro.models import transformer
+
+TRAIN_STEPS = 60
+
+
+def _utilisation(cfg, params, state, dcfg, *, batches=24):
+    n = cfg.lram.num_locations
+    hist = np.zeros(n, np.float64)
+
+    @jax.jit
+    def probe(batch):
+        _, _, _, acc = transformer.forward(
+            params, state, batch, cfg, collect_access=True
+        )
+        return acc
+
+    for i in range(batches):
+        batch = jax.tree.map(
+            jnp.asarray, data.get_batch(dcfg, step=5_000_000 + i)
+        )
+        acc = probe(batch)
+        for idx, w in acc.values():
+            np.add.at(hist, np.asarray(idx).reshape(-1),
+                      np.asarray(w, dtype=np.float64).reshape(-1))
+    used = float((hist > 0).mean())
+    p = hist / max(hist.sum(), 1e-12)
+    nz = p[p > 0]
+    kl = float((nz * np.log(nz * hist.size)).sum())
+    return used, kl
+
+
+def run() -> list[tuple[str, float, str]]:
+    cfg = configs.get_smoke_config("lram-bert-small")
+    dcfg = data.DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=64, global_batch=64,
+        kind="facts", objective="mlm",
+    )
+    params, state = transformer.init(jax.random.PRNGKey(0), cfg)
+    used0, kl0 = _utilisation(cfg, params, state, dcfg, batches=8)
+
+    # brief training (the paper measures a trained model)
+    opt_cfg = optim.OptimConfig(lr=3e-4, memory_lr_mult=10.0)
+    step_fn = build_train_step(cfg, opt_cfg)
+    opt_state = optim.adam_init(params)
+    resid = jnp.zeros(())
+    for step in range(TRAIN_STEPS):
+        batch = jax.tree.map(jnp.asarray, data.get_batch(dcfg, step=step))
+        params, opt_state, state, resid, _ = step_fn(
+            params, opt_state, state, resid, batch
+        )
+    used1, kl1 = _utilisation(cfg, params, state, dcfg)
+
+    return [
+        ("table5.memory_locations", 0.0,
+         f"{cfg.lram.num_locations} (reduced config; paper 2^18..2^22)"),
+        ("table5.usage_pct_untrained", 0.0, f"{100*used0:.2f}%"),
+        ("table5.usage_pct_trained", 0.0,
+         f"{100*used1:.2f}% of slots touched (paper: 98.5-99.99%)"),
+        ("table5.kl_from_uniform_trained", 0.0,
+         f"{kl1:.3f} nats (paper: 1.57-2.52; untrained {kl0:.3f})"),
+    ]

@@ -1,0 +1,63 @@
+"""The paper's headline plot (Fig 3): layer cost vs memory size.
+
+    PYTHONPATH=src python examples/memory_scaling.py
+
+Times the LRAM layer forward at N = 2^16 .. 2^20 and PKM at matched sizes:
+LRAM stays flat (O(1)); PKM grows ~ sqrt(N).  ASCII plot, CPU wall-clock.
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import lram, pkm
+
+BATCH = 256
+KEY = jax.random.PRNGKey(0)
+
+
+def timed(f, *args, iters=5):
+    jax.block_until_ready(f(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.time()
+        jax.block_until_ready(f(*args))
+        ts.append(time.time() - t0)
+    return float(np.median(ts)) * 1e3
+
+
+def main():
+    print(f"{'N':>10} {'LRAM ms':>9} {'PKM ms':>9}")
+    results = []
+    for log2 in (16, 17, 18, 19, 20):
+        cfg = lram.LRAMConfig(log2_locations=log2, m=64, heads=8,
+                              query_norm="rms")
+        params, state = lram.lram_init(KEY, cfg)
+        x = jax.random.normal(KEY, (BATCH, cfg.in_dim))
+        f = jax.jit(lambda p, x, c=cfg, s=state:
+                    lram.lram_apply(p, s, x, c)[0])
+        t_lram = timed(f, params, x)
+
+        n_keys = int(2 ** (log2 / 2))
+        pcfg = pkm.PKMConfig(n_keys=n_keys, heads=8, key_dim=64,
+                             value_dim=512, top_k=32, query_norm="none")
+        pparams, pstate = pkm.pkm_init(KEY, 512, pcfg)
+        xp = jax.random.normal(KEY, (BATCH, 512))
+        fp = jax.jit(lambda p, x, c=pcfg, s=pstate:
+                     pkm.pkm_apply(p, s, x, c)[0])
+        t_pkm = timed(fp, pparams, xp)
+        results.append((log2, t_lram, t_pkm))
+        print(f"{2**log2:>10} {t_lram:>9.2f} {t_pkm:>9.2f}")
+
+    tmax = max(max(r[1], r[2]) for r in results)
+    print("\n  LRAM (#)  vs PKM (*)   — flat vs sqrt(N)")
+    for log2, tl, tp in results:
+        bars_l = int(40 * tl / tmax)
+        bars_p = int(40 * tp / tmax)
+        print(f"2^{log2} |{'#' * bars_l}")
+        print(f"     |{'*' * bars_p}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Batched serving example: prefill + greedy decode on any assigned arch.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch yi-9b
+    PYTHONPATH=src python examples/serve_batch.py --arch mamba2-1.3b --gen 32
+
+Uses the reduced (smoke) configs so it runs on CPU; the same decode_step is
+what the decode_32k / long_500k dry-run cells lower at production scale.
+"""
+
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="yi-9b")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--gen", type=int, default=16)
+    args = p.parse_args()
+    serve.main([
+        "--arch", args.arch, "--smoke",
+        "--batch", str(args.batch),
+        "--prompt-len", "16",
+        "--gen", str(args.gen),
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Optimized-HLO collective parser.
+
+cost_analysis() has no collective accounting, so the roofline's third term
+is derived by scanning the post-SPMD-partitioning HLO text for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops, decoding their (per-device) result shapes and replica groups, and
+applying ring wire-cost factors:
+
+    all-reduce       2 (g-1)/g * bytes      (reduce-scatter + all-gather)
+    all-gather         (g-1)/g * bytes_out
+    reduce-scatter     (g-1)/g * bytes_in   (= bytes_out * g)
+    all-to-all         (g-1)/g * bytes
+    collective-permute           bytes
+
+Shapes in partitioned HLO are already per-device, so the returned numbers
+are wire bytes per device per step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+# one result shape: bf16[4,2048]{1,0} — possibly inside a tuple
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_GROUPS_RE = re.compile(
+    r"replica_groups=(\{\{[^}]*\}|\[\d+(?:,\d+)*\]<=\[[\d,]+\])"
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 2  # conservative default
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return max(1, first.count(",") + 1)
+    # iota format: [G,N]<=[...] -> group size N (last dim)
+    dims = g[1:].split("]")[0].split(",")
+    return max(1, int(dims[-1]))
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    raw_bytes: dict        # sum of result bytes per op kind
+    wire_bytes: dict       # ring-model wire bytes per device per op kind
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict = defaultdict(int)
+    raw: dict = defaultdict(float)
+    wire: dict = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        shape_str, op, _start = m.group(1), m.group(2), m.group(3)
+        # async pairs appear as op-start/op-done: count -start only, and
+        # skip the "-done" lines (they don't match: '(-done' not in regex)
+        b = _shape_bytes(shape_str)
+        if _start and shape_str.startswith("("):
+            b //= 2  # async-start result tuples alias (operand, result)
+        g = _group_size(line)
+        counts[op] += 1
+        raw[op] += b
+        if op == "all-reduce":
+            wire[op] += 2.0 * (g - 1) / g * b
+        elif op == "all-gather":
+            wire[op] += (g - 1) / g * b
+        elif op == "reduce-scatter":
+            wire[op] += (g - 1) * b  # input = out*g; (g-1)/g * out*g
+        elif op == "all-to-all":
+            wire[op] += (g - 1) / g * b
+        else:  # collective-permute
+            wire[op] += float(b)
+    return CollectiveStats(dict(counts), dict(raw), dict(wire))

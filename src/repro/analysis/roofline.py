@@ -1,0 +1,156 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline).
+
+    PYTHONPATH=src python -m repro.analysis.roofline [--dir artifacts/dryrun]
+
+Per (arch x shape) single-pod cell, derives the three roofline terms from
+the compiled artifact (depth-extrapolated exact counts — see dryrun.py):
+
+    compute    = HLO_FLOPs_per_device / 197 TFLOP/s (bf16)
+    memory     = HLO_bytes_per_device / 819 GB/s HBM
+    collective = wire_bytes_per_device / 50 GB/s ICI  (ring-model accounting,
+                 see analysis/hlo.py; single-pod => all traffic is ICI)
+
+plus MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs (remat + replication waste), the
+dominant term, and the roofline fraction
+    model_compute_time / max(term)  ("how close to the compute roofline a
+perfectly-overlapped execution of this artifact could get").
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12   # bf16 per chip (TPU v5e-class)
+HBM_BW = 819e9        # bytes/s per chip
+ICI_BW = 50e9         # bytes/s per link
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+
+
+def analyze_artifact(art: dict) -> dict | None:
+    if art.get("status") != "ok":
+        return None
+    ex = art.get("extrapolated") or art.get("scanned")
+    src = "extrapolated" if "extrapolated" in art else "scanned"
+    flops = ex.get("flops_per_device")
+    bytes_ = ex.get("bytes_per_device")
+    wire = ex.get("total_wire_bytes_per_device") or 0.0
+    if flops is None:
+        return None
+    devices = art["devices"]
+    shape = art["shape"]
+    tokens = SHAPE_TOKENS[shape]
+    mult = 6 if shape.startswith("train") else 2
+    model_flops_global = mult * art["params_active"] * tokens
+    model_flops_dev = model_flops_global / devices
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = (bytes_ or 0.0) / HBM_BW
+    t_coll = wire / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    return {
+        "arch": art["arch"],
+        "shape": shape,
+        "source": src,
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_,
+        "wire_bytes_per_device": wire,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_global": model_flops_global,
+        "useful_flops_ratio": model_flops_dev / flops if flops else None,
+        "roofline_fraction": (
+            (model_flops_dev / PEAK_FLOPS) / t_bound if t_bound else None
+        ),
+        "step_time_bound_s": t_bound,
+    }
+
+
+def _fmt_t(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{1e3 * x:.1f}ms"
+
+
+def render_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute | memory | collective | dominant | "
+           "useful-FLOP ratio | roofline frac |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["shape"], r["arch"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_t(r['t_compute_s'])} "
+            f"| {_fmt_t(r['t_memory_s'])} | {_fmt_t(r['t_collective_s'])} "
+            f"| **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="artifacts/dryrun")
+    p.add_argument("--mesh", default="single")
+    p.add_argument("--out", default="artifacts/roofline.md")
+    p.add_argument("--json-out", default="artifacts/roofline.json")
+    args = p.parse_args(argv)
+
+    rows, skipped, errors = [], [], []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        with open(path) as f:
+            art = json.load(f)
+        if art.get("mesh") != args.mesh:
+            continue
+        if art.get("status") == "skipped":
+            skipped.append((art["arch"], art["shape"], art["reason"]))
+            continue
+        if art.get("status") == "error":
+            errors.append((art["arch"], art["shape"],
+                           art.get("error", "?")))
+            continue
+        row = analyze_artifact(art)
+        if row:
+            rows.append(row)
+
+    table = render_table(rows)
+    report = ["# Roofline (single-pod 16x16, per-device terms)", "",
+              f"constants: {PEAK_FLOPS/1e12:.0f} TFLOP/s bf16, "
+              f"{HBM_BW/1e9:.0f} GB/s HBM, {ICI_BW/1e9:.0f} GB/s ICI", "",
+              table, ""]
+    if skipped:
+        report.append("## Skipped cells")
+        for a, s, r in skipped:
+            report.append(f"* {a} x {s}: {r}")
+    if errors:
+        report.append("## Errored cells")
+        for a, s, e in errors:
+            report.append(f"* {a} x {s}: {e}")
+    text = "\n".join(report)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

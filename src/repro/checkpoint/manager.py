@@ -1,0 +1,182 @@
+"""Fault-tolerant checkpointing: atomic, checksummed, async, elastic.
+
+Layout:  <dir>/step_<n>/
+            manifest.json   — leaf paths, shapes, dtypes, crc32 checksums
+            <leaf>.npy      — one file per tree leaf (path-mangled)
+
+Guarantees:
+  * atomicity   — writes go to `step_<n>.tmp/` and are renamed only after
+    the manifest (written last) is fsync'd; a crash mid-save never corrupts
+    the latest valid checkpoint;
+  * integrity   — restore verifies every leaf's crc32 against the manifest
+    and falls back to the newest *valid* checkpoint;
+  * async       — `save(..., blocking=False)` snapshots to host memory
+    synchronously (cheap) and writes in a daemon thread, overlapping I/O
+    with the next training steps;
+  * elasticity  — `restore(sharding=...)` re-places leaves under any target
+    NamedSharding, so a checkpoint taken on one mesh resumes on another
+    (mesh-reshape restart).  At fleet scale each host would read only its
+    shard slices; here leaves are small enough to round-trip via host numpy.
+  * retention   — keep the newest `keep` checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _mangle(path: str) -> str:
+    return path.replace("/", "__") + ".npy"
+
+
+def _tree_items(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        items.append((name, leaf))
+    return items
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ---------------- save ----------------
+
+    def save(self, step: int, tree, *, blocking: bool = True) -> None:
+        # snapshot to host memory synchronously (device buffers may mutate)
+        host = [(name, np.asarray(jax.device_get(leaf)))
+                for name, leaf in _tree_items(tree)]
+        self.wait()  # one writer at a time (async or blocking)
+        if blocking:
+            self._write(step, host)
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True
+            )
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_items) -> None:
+        final = os.path.join(self.dir, f"step_{step:012d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": {}}
+        for name, arr in host_items:
+            fn = _mangle(name)
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"][name] = {
+                "file": fn,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            }
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(
+                os.path.join(self.dir, f"step_{s:012d}"), ignore_errors=True
+            )
+
+    # ---------------- restore ----------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d.removeprefix("step_")))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def _load_dir(self, step: int):
+        d = os.path.join(self.dir, f"step_{step:012d}")
+        with open(os.path.join(d, _MANIFEST)) as f:
+            manifest = json.load(f)
+        out = {}
+        for name, meta in manifest["leaves"].items():
+            arr = np.load(os.path.join(d, meta["file"]))
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != meta["crc32"]:
+                raise IOError(f"checksum mismatch for {name} at step {step}")
+            out[name] = arr
+        return out
+
+    def restore(self, like, *, step: int | None = None, sharding=None):
+        """Restore into the structure of `like` (a pytree of arrays or
+        ShapeDtypeStructs).  Tries newest-first until a valid checkpoint
+        loads; `sharding` is a pytree (or single sharding) for elastic
+        re-placement on a different mesh.
+
+        Returns (step, tree) or (None, None) if nothing restorable."""
+        steps = [step] if step is not None else self.all_steps()[::-1]
+        data = None
+        found = None
+        for s in steps:
+            try:
+                data = self._load_dir(s)
+                found = s
+                break
+            except Exception:
+                continue
+        if data is None:
+            return None, None
+
+        names = [name for name, _ in _tree_items(like)]
+        missing = [n for n in names if n not in data]
+        if missing:
+            raise KeyError(f"checkpoint at step {found} missing: {missing[:5]}")
+
+        flat_like, treedef = jax.tree_util.tree_flatten(like)
+        shard_flat = (
+            jax.tree_util.tree_flatten(sharding)[0]
+            if sharding is not None and not _is_single_sharding(sharding)
+            else [sharding] * len(flat_like)
+        )
+        leaves = []
+        for name, proto, shd in zip(names, flat_like, shard_flat):
+            arr = data[name]
+            want = getattr(proto, "dtype", None)
+            if want is not None and str(arr.dtype) != str(want):
+                arr = arr.astype(want)
+            if shd is not None:
+                leaves.append(jax.device_put(arr, shd))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return found, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _is_single_sharding(s) -> bool:
+    return hasattr(s, "addressable_devices") or hasattr(s, "device_set")

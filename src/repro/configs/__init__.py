@@ -1,0 +1,93 @@
+"""Architecture registry: one module per assigned arch + the paper's models.
+
+Every module exposes `config()` (the exact published configuration) and
+`smoke_config()` (a reduced same-family config for CPU smoke tests).
+`get_config(name)` / `get_smoke_config(name)` dispatch by arch id; shapes
+live in repro.configs.shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.core.lram import LRAMConfig
+from repro.core import lram as lram_mod
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "yi-9b",
+    "qwen2-1.5b",
+    "starcoder2-3b",
+    "h2o-danube-3-4b",
+    "zamba2-2.7b",
+    "phi3.5-moe-42b-a6.6b",
+    "mixtral-8x7b",
+    "mamba2-1.3b",
+    "whisper-small",
+    "qwen2-vl-72b",
+)
+
+PAPER_MODELS = (
+    "lram-bert-baseline",
+    "lram-bert-pkm",
+    "lram-bert-small",
+    "lram-bert-medium",
+    "lram-bert-large",
+)
+
+_MODULES = {
+    "yi-9b": "yi_9b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "starcoder2-3b": "starcoder2_3b",
+    "h2o-danube-3-4b": "h2o_danube3_4b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "whisper-small": "whisper_small",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "lram-bert-baseline": "lram_bert",
+    "lram-bert-pkm": "lram_bert",
+    "lram-bert-small": "lram_bert",
+    "lram-bert-medium": "lram_bert",
+    "lram-bert-large": "lram_bert",
+}
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    mod = _module(name)
+    if name.startswith("lram-bert"):
+        cfg = mod.config(variant=name.removeprefix("lram-bert-"))
+    else:
+        cfg = mod.config()
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_smoke_config(name: str, **overrides) -> ModelConfig:
+    mod = _module(name)
+    if name.startswith("lram-bert"):
+        cfg = mod.smoke_config(variant=name.removeprefix("lram-bert-"))
+    else:
+        cfg = mod.smoke_config()
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def with_lram(cfg: ModelConfig, log2_locations: int = 20,
+              layer: int | None = None) -> ModelConfig:
+    """Insert the paper's memory-augmented FFN at one layer of any arch."""
+    layer = cfg.num_layers // 2 if layer is None else layer
+    return dataclasses.replace(
+        cfg,
+        name=f"{cfg.name}+lram{log2_locations}",
+        lram_layers=(layer,),
+        lram=lram_mod.memffn_config(
+            cfg.d_model, log2_locations, query_norm="batch"
+        ),
+    )

@@ -1,0 +1,81 @@
+"""The paper's own models (§3): 6-layer BERT-style MLM transformer, w=512,
+with the 4th layer's FC subnetwork replaced by LRAM (or PKM).
+
+Variants: baseline | pkm | small (2^18 slots) | medium (2^20) | large (2^22)
+— paper Tables 2 & 5."""
+
+import dataclasses
+
+from repro.core import lram as lram_mod
+from repro.core.pkm import PKMConfig
+from repro.models.config import ModelConfig
+
+_MEM_LAYER = 3  # "the fourth transformer layer" (0-indexed)
+
+_LOG2 = {"small": 18, "medium": 20, "large": 22}
+
+
+def _base(vocab: int = 30000, w: int = 512) -> ModelConfig:
+    return ModelConfig(
+        name="lram-bert-baseline",
+        family="dense",
+        num_layers=6,
+        d_model=w,
+        num_heads=8,
+        num_kv_heads=8,
+        d_ff=2048,           # hidden width 2048, GELU (paper §3.2)
+        vocab_size=vocab,
+        objective="mlm",
+        pos_scheme="learned",
+        max_seq=256,
+        act="gelu",
+        norm="layer",
+        remat=False,
+    )
+
+
+def config(variant: str = "baseline") -> ModelConfig:
+    cfg = _base()
+    if variant == "baseline":
+        return cfg
+    if variant == "pkm":
+        return dataclasses.replace(
+            cfg,
+            name="lram-bert-pkm",
+            pkm_layers=(_MEM_LAYER,),
+            pkm=PKMConfig(n_keys=256, heads=8, key_dim=64, value_dim=512,
+                          top_k=32, query_norm="batch"),
+        )
+    log2 = _LOG2[variant]
+    return dataclasses.replace(
+        cfg,
+        name=f"lram-bert-{variant}",
+        lram_layers=(_MEM_LAYER,),
+        lram=lram_mod.memffn_config(cfg.d_model, log2, query_norm="batch"),
+    )
+
+
+def smoke_config(variant: str = "baseline") -> ModelConfig:
+    cfg = dataclasses.replace(
+        _base(vocab=256, w=64),
+        name=f"lram-bert-{variant}-smoke",
+        num_layers=3,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        max_seq=64,
+    )
+    if variant == "baseline":
+        return cfg
+    if variant == "pkm":
+        return dataclasses.replace(
+            cfg,
+            pkm_layers=(1,),
+            pkm=PKMConfig(n_keys=16, heads=2, key_dim=16, value_dim=64,
+                          top_k=4, query_norm="batch"),
+        )
+    return dataclasses.replace(
+        cfg,
+        lram_layers=(1,),
+        lram=lram_mod.memffn_config(64, 16, query_norm="batch"),
+    )

@@ -1,0 +1,81 @@
+"""Assigned input-shape set + ShapeDtypeStruct builders for the dry-run.
+
+Every (arch x shape) pair is a dry-run cell:
+
+  train_4k     seq 4096,    global_batch 256  -> train_step
+  prefill_32k  seq 32768,   global_batch 32   -> prefill (forward + caches)
+  decode_32k   seq 32768,   global_batch 128  -> decode_step (1 new token)
+  long_500k    seq 524288,  global_batch 1    -> decode_step; only for
+               sub-quadratic archs (SSM / hybrid / SWA) — see DESIGN.md §5
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig, validate_cell
+
+Sds = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def skip_reason(cfg: ModelConfig, shape_name: str) -> str | None:
+    return validate_cell(cfg, shape_name)
+
+
+def _extras(cfg: ModelConfig, b: int, s: int) -> dict:
+    """Modality-frontend STUBS: precomputed frame/patch embeddings."""
+    extras = {}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        extras["encoder_embeds"] = Sds((b, cfg.encoder_len, cfg.d_model), dt)
+    if cfg.vision_tokens:
+        extras["vision_embeds"] = Sds((b, cfg.vision_tokens, cfg.d_model), dt)
+        extras["positions"] = Sds((3, b, s), jnp.int32)
+    return extras
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step.
+
+    train  -> {"batch": {tokens, labels, ...extras}}
+    prefill-> {"batch": {tokens, ...extras}}
+    decode -> {"tokens": (B,1), "cache": <full cache pytree>}
+    """
+    cell = SHAPES[shape_name]
+    b, s = cell.global_batch, cell.seq_len
+    if cell.mode == "train":
+        batch = {
+            "tokens": Sds((b, s), jnp.int32),
+            "labels": Sds((b, s), jnp.int32),
+        }
+        batch.update(_extras(cfg, b, s))
+        return {"batch": batch}
+    if cell.mode == "prefill":
+        batch = {"tokens": Sds((b, s), jnp.int32)}
+        batch.update(_extras(cfg, b, s))
+        return {"batch": batch}
+    # decode: one new token against a cache of length s
+    return {
+        "tokens": Sds((b, 1), jnp.int32),
+        "cache": transformer.cache_specs(cfg, b, s),
+    }

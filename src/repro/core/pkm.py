@@ -1,0 +1,105 @@
+"""Product-Key Memory (Lample et al. 2019) — the paper's main baseline.
+
+O(sqrt(N)) lookup: keys form a Cartesian product of two codebooks of
+sqrt(N) half-keys; per head, score both halves, take top-k in each, combine
+the k*k Cartesian candidates and re-select top-k; softmax the scores and
+gather value rows.  Configured as in the paper's comparison: 8 heads,
+N = 2**16, value dim 512, key dim 64, batchnorm on queries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+
+
+@dataclasses.dataclass(frozen=True)
+class PKMConfig:
+    n_keys: int = 256          # memory locations = n_keys**2 (2**16)
+    heads: int = 8
+    key_dim: int = 64          # per-half query/key dim = key_dim/2... see init
+    value_dim: int = 512
+    top_k: int = 32
+    query_norm: str = "batch"
+    value_init_scale: float = 0.02
+
+    @property
+    def num_locations(self) -> int:
+        return self.n_keys**2
+
+    @property
+    def half_dim(self) -> int:
+        return self.key_dim // 2
+
+    @property
+    def num_params(self) -> int:
+        return (
+            self.num_locations * self.value_dim
+            + 2 * self.heads * self.n_keys * self.half_dim
+        )
+
+
+def pkm_init(key, in_dim: int, cfg: PKMConfig, *, dtype=jnp.float32):
+    kq, k1, k2, kv = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "query": nn.dense_init(kq, in_dim, cfg.heads * cfg.key_dim, dtype=dtype),
+        "subkeys1": nn.fan_in_init()(k1, (cfg.heads, cfg.n_keys, cfg.half_dim), dtype),
+        "subkeys2": nn.fan_in_init()(k2, (cfg.heads, cfg.n_keys, cfg.half_dim), dtype),
+        "values": nn.truncated_normal_init(cfg.value_init_scale)(
+            kv, (cfg.num_locations, cfg.value_dim), dtype
+        ),
+    }
+    state: dict[str, Any] = {}
+    if cfg.query_norm == "batch":
+        params["qnorm"], state["qnorm"] = nn.batchnorm_init(
+            cfg.heads * cfg.key_dim, dtype=dtype
+        )
+    return params, state
+
+
+def pkm_apply(params, state, x, cfg: PKMConfig, *, train: bool = False,
+              return_access: bool = False):
+    """x: (..., in_dim) -> (..., value_dim)."""
+    lead = x.shape[:-1]
+    q = nn.dense(params["query"], x)  # (..., heads*key_dim)
+    new_state = dict(state)
+    if cfg.query_norm == "batch":
+        q, new_state["qnorm"] = nn.batchnorm(
+            params["qnorm"], state["qnorm"], q, train=train
+        )
+    q = q.reshape(*lead, cfg.heads, 2, cfg.half_dim).astype(jnp.float32)
+    q1, q2 = q[..., 0, :], q[..., 1, :]  # (..., heads, half_dim)
+
+    s1 = jnp.einsum("...hd,hnd->...hn", q1, params["subkeys1"].astype(jnp.float32))
+    s2 = jnp.einsum("...hd,hnd->...hn", q2, params["subkeys2"].astype(jnp.float32))
+    t1, i1 = jax.lax.top_k(s1, cfg.top_k)  # (..., heads, k)
+    t2, i2 = jax.lax.top_k(s2, cfg.top_k)
+    # Cartesian combination: scores (..., heads, k, k)
+    comb = t1[..., :, None] + t2[..., None, :]
+    flat = comb.reshape(*comb.shape[:-2], cfg.top_k * cfg.top_k)
+    scores, sel = jax.lax.top_k(flat, cfg.top_k)  # (..., heads, k)
+    r1 = jnp.take_along_axis(i1, sel // cfg.top_k, axis=-1)
+    r2 = jnp.take_along_axis(i2, sel % cfg.top_k, axis=-1)
+    idx = r1 * cfg.n_keys + r2  # (..., heads, k) flat memory indices
+    w = jax.nn.softmax(scores, axis=-1)
+    rows = jnp.take(params["values"], idx, axis=0).astype(w.dtype)
+    out = jnp.einsum("...hk,...hkm->...m", w, rows)  # sum over heads too
+    out = out.astype(x.dtype)
+    if return_access:
+        return out, new_state, (idx, w)
+    return out, new_state
+
+
+def flop_count(in_dim: int, tokens: int, cfg: PKMConfig) -> int:
+    """Paper Table 3: 2*w*sqrt(N) + w^2 + O(w) per token."""
+    per_tok = (
+        2 * in_dim * cfg.heads * cfg.key_dim  # query proj
+        + 2 * cfg.heads * 2 * cfg.n_keys * cfg.half_dim  # half scores
+        + cfg.heads * cfg.top_k * cfg.value_dim * 2  # gather+reduce
+    )
+    return tokens * per_tok

@@ -1,0 +1,48 @@
+"""Torus-parameterising activation (paper §2.3).
+
+Embeds the torus T_K in C^n as a product of unit circles: the query point is
+read off the *arguments* of the complex entries, and the lookup output is
+scaled by the reciprocal sum of reciprocal magnitudes,
+
+    theta(z_1..z_n) = (sum_i 1/|z_i|)^{-1} * phi(K_i/(2pi) * arg z_i, ...)
+
+which makes theta Lipschitz (no discontinuity at z=0: the scale vanishes
+there) and positively 1-homogeneous: theta(lambda z) = lambda theta(z) for
+lambda >= 0 — the network controls output magnitude through query magnitude.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_TWO_PI = 2.0 * np.pi
+_SAFE_EPS = 1e-20
+
+
+def torus_map(x: jnp.ndarray, K) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Map real inputs (..., 2n) to torus coords (..., n) + scale (..., 1).
+
+    The first n features are the real parts, the last n the imaginary parts
+    (a layout that keeps each half contiguous for sharding).  The scale is
+    (sum_i 1/|z_i|)^{-1}, exactly the paper's formula.  Where |z_i| ~ 0 the
+    angle is undefined; a double-`where` keeps gradients finite (the scale
+    factor sends the output itself to zero there, preserving continuity).
+    """
+    n = x.shape[-1] // 2
+    re, im = x[..., :n], x[..., n:]
+    # XLA CPU's atan2 returns NaN for denormal arguments; flushing them to
+    # zero is exact at float32 angle resolution.
+    re = jnp.where(jnp.abs(re) < 1e-30, 0.0, re)
+    im = jnp.where(jnp.abs(im) < 1e-30, 0.0, im)
+    mag_sq = re * re + im * im
+    safe = mag_sq > _SAFE_EPS
+    re_s = jnp.where(safe, re, 1.0)
+    im_s = jnp.where(safe, im, 0.0)
+    theta = jnp.arctan2(im_s, re_s)  # (-pi, pi]
+    K = jnp.asarray(K, dtype=x.dtype)
+    q = jnp.mod(theta / _TWO_PI, 1.0) * K  # [0, K)
+    mag = jnp.sqrt(jnp.where(safe, mag_sq, 1.0))
+    inv = jnp.where(safe, 1.0 / mag, 1.0 / jnp.sqrt(_SAFE_EPS))
+    scale = 1.0 / jnp.sum(inv, axis=-1, keepdims=True)
+    return q, scale

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    DataConfig,
+    get_batch,
+    make_fact_table,
+)

@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    MeshAxes,
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+    shard_params,
+)

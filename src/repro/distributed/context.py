@@ -1,0 +1,61 @@
+"""Ambient mesh context for in-model sharding constraints.
+
+GSPMD occasionally resolves an einsum by exploiting whatever dim happens to
+be sharded (e.g. contracting over an FSDP-sharded weight dim, all-reducing
+activation-sized partials — the mixtral pathology in EXPERIMENTS.md §Perf).
+Model code can pin activation layouts with `constrain(x, ...spec)`; it is a
+no-op when no mesh is registered (single-device tests) or when a dim is not
+divisible by its axis.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def batch_axes() -> tuple:
+    """The data-parallel axis spec entry for the current mesh."""
+    if _MESH is None:
+        return None
+    if "pod" in _MESH.axis_names:
+        return ("pod", "data")
+    return "data"
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint(x, P(*spec)) under the ambient mesh.
+
+    Per-dim divisibility fallback (entry -> None when the dim does not
+    divide the axis product); no-op without a mesh."""
+    if _MESH is None:
+        return x
+    fixed = []
+    for dim, s in zip(x.shape, spec):
+        if s is None:
+            fixed.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        if any(a not in _MESH.axis_names for a in axes):
+            fixed.append(None)
+            continue
+        size = int(np.prod([_MESH.shape[a] for a in axes]))
+        fixed.append(s if dim % size == 0 else None)
+    fixed += [None] * (x.ndim - len(fixed))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*fixed))
+    )

@@ -1,0 +1,63 @@
+"""Model-parallel LRAM lookup: masked local gather + one psum.
+
+THE key TPU-native re-think of the paper's random-access memory (DESIGN.md
+§3): the value table's rows are sharded over the `model` mesh axis.  Instead
+of cross-chip random access (ruinous on TPU interconnects), every device
+
+  1. receives the full (replicated-over-model) index/weight sets,
+  2. gathers ONLY indices that fall inside its row shard (others masked to
+     weight zero, index clamped),
+  3. partially interpolates, and
+  4. joins the partial outputs with a single psum over `model`.
+
+Communication is O(tokens * heads * m) — *independent of N* — identical in
+shape to a tensor-parallel FFN's reduce.  The O(1)-in-N property of the
+paper survives sharding.  The backward pass (autodiff through shard_map)
+scatter-adds only into local rows: value-table gradients never cross the
+model axis at all.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+
+def sharded_gather_interp(mesh: Mesh, *, axis: str = "model"):
+    """Returns an `interp_impl` hook (values, idx, w) -> out for lram_apply.
+
+    values must be laid out P(axis, None); idx/w replicated along `axis`
+    (they are functions of activations, which are batch-sharded on `data`).
+    """
+    n_shards = mesh.shape[axis]
+    other = tuple(a for a in mesh.axis_names if a != axis)
+    act_spec = P(other if len(other) > 1 else (other[0] if other else None))
+
+    def interp(values, idx, w):
+        rows_local = values.shape[0] // n_shards
+
+        def local(values_l, idx_l, w_l):
+            base = jax.lax.axis_index(axis) * rows_local
+            rel = idx_l - base
+            ok = (rel >= 0) & (rel < rows_local)
+            rel_safe = jnp.clip(rel, 0, rows_local - 1)
+            rows = jnp.take(values_l, rel_safe, axis=0).astype(w_l.dtype)
+            wm = w_l * ok.astype(w_l.dtype)
+            out = jnp.einsum("...k,...km->...m", wm, rows)
+            return jax.lax.psum(out, axis)
+
+        dim_spec = act_spec[0] if len(act_spec) else None
+        io_spec = P(*((dim_spec,) + (None,) * (idx.ndim - 1)))
+        return shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(axis, None), io_spec, io_spec),
+            out_specs=io_spec,
+            check_vma=False,
+        )(values, idx, w)
+
+    return interp

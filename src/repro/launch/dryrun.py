@@ -1,0 +1,369 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks the device count on first
+# init).  This module is the ONLY place the 512-device placeholder platform
+# is created; smoke tests and benchmarks see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+For each cell this proves the distribution config is coherent end-to-end:
+jit(step).lower(<ShapeDtypeStructs with NamedShardings>).compile() must
+succeed on the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh, and the
+artifact's memory_analysis/cost_analysis + the optimized-HLO collective scan
+are written to artifacts/dryrun/*.json for the roofline (§Roofline).
+
+train_4k lowers train_step (fwd+bwd+Adam, donated); prefill_32k lowers
+prefill (forward + cache build); decode_32k / long_500k lower decode_step
+(one token against a seq_len cache).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs, optim
+from repro.analysis import hlo as hlo_lib
+from repro.configs import shapes as shapes_lib
+from repro.distributed import sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))),
+    "artifacts", "dryrun",
+)
+
+
+def _sds(tree, mesh, spec_tree):
+    return jax.tree.map(
+        lambda sd, spec: jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        tree, spec_tree,
+    )
+
+
+def _replicated(tree, mesh):
+    return jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype, sharding=NamedSharding(mesh, P())
+        ),
+        tree,
+    )
+
+
+def build_lowerable(cfg, shape_name: str, mesh):
+    """Returns (fn, example_args) ready for jit(fn).lower(*args)."""
+    cell = shapes_lib.SHAPES[shape_name]
+    specs = shapes_lib.input_specs(cfg, shape_name)
+    params_sh, state_sh = jax.eval_shape(
+        lambda: transformer.init(jax.random.PRNGKey(0), cfg)
+    )
+    pspecs = sharding.param_pspecs(params_sh, mesh)
+    params_in = _sds(params_sh, mesh, pspecs)
+    state_in = _replicated(state_sh, mesh)
+    bspec = sharding.batch_pspec(mesh)
+
+    if cell.mode == "train":
+        opt_cfg = optim.OptimConfig()
+        opt_sh = jax.eval_shape(optim.adam_init, params_sh)
+        opt_in = {
+            "mu": _sds(opt_sh["mu"], mesh, pspecs),
+            "nu": _sds(opt_sh["nu"], mesh, pspecs),
+            "step": jax.ShapeDtypeStruct(
+                (), jnp.int32, sharding=NamedSharding(mesh, P())
+            ),
+        }
+        batch_in = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct(
+                sd.shape, sd.dtype,
+                sharding=NamedSharding(
+                    mesh, P(*(bspec + (None,) * (len(sd.shape) - 1)))
+                    if len(sd.shape) != 3 or sd.shape[0] != 3
+                    else P(None, *(bspec + (None,)))  # (3,B,S) positions
+                ),
+            ),
+            specs["batch"],
+        )
+
+        def train_step(params, opt_state, model_state, batch):
+            (loss, (new_state, metrics)), grads = jax.value_and_grad(
+                transformer.loss_fn, has_aux=True
+            )(params, model_state, batch, cfg, train=True)
+            new_params, new_opt, stats = optim.adam_update(
+                grads, opt_state, params, opt_cfg
+            )
+            return new_params, new_opt, new_state, {
+                "loss": loss, **stats
+            }
+
+        fn = jax.jit(train_step, donate_argnums=(0, 1))
+        return fn, (params_in, opt_in, state_in, batch_in)
+
+    if cell.mode == "prefill":
+        batch_in = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct(
+                sd.shape, sd.dtype,
+                sharding=NamedSharding(
+                    mesh, P(*(bspec + (None,) * (len(sd.shape) - 1)))
+                    if len(sd.shape) != 3 or sd.shape[0] != 3
+                    else P(None, *(bspec + (None,)))
+                ),
+            ),
+            specs["batch"],
+        )
+
+        def prefill_step(params, model_state, batch):
+            return transformer.prefill(
+                params, model_state, batch, cfg, max_len=cell.seq_len
+            )
+
+        fn = jax.jit(prefill_step)
+        return fn, (params_in, state_in, batch_in)
+
+    # decode
+    cache_sh = specs["cache"]
+    cache_specs_tree = sharding.cache_pspecs(cache_sh, cfg, mesh)
+    cache_in = _sds(cache_sh, mesh, cache_specs_tree)
+    tokens_in = jax.ShapeDtypeStruct(
+        specs["tokens"].shape, specs["tokens"].dtype,
+        sharding=NamedSharding(
+            mesh,
+            P(bspec[0] if specs["tokens"].shape[0] % np.prod(
+                [mesh.shape[a] for a in (
+                    bspec[0] if isinstance(bspec[0], tuple) else (bspec[0],)
+                )]) == 0 else None, None),
+        ),
+    )
+    pos_in = jax.ShapeDtypeStruct(
+        (), jnp.int32, sharding=NamedSharding(mesh, P())
+    )
+
+    def serve_step(params, model_state, tokens, pos, cache):
+        return transformer.decode_step(
+            params, model_state, tokens, pos, cache, cfg
+        )
+
+    fn = jax.jit(serve_step, donate_argnums=(4,))
+    return fn, (params_in, state_in, tokens_in, pos_in, cache_in)
+
+
+def _compile_and_measure(cfg, shape_name, mesh, save_hlo_path=None):
+    t0 = time.time()
+    fn, args = build_lowerable(cfg, shape_name, mesh)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # pragma: no cover
+        mem_info = {"error": str(e)}
+    hlo_text = compiled.as_text()
+    coll = hlo_lib.parse_collectives(hlo_text)
+    if save_hlo_path:
+        with open(save_hlo_path, "w") as f:
+            f.write(hlo_text)
+    return {
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": cost.get("flops"),
+        "bytes_per_device": cost.get("bytes accessed"),
+        "memory_analysis": mem_info,
+        "collective_counts": coll.counts,
+        "collective_wire_bytes": coll.wire_bytes,
+        "total_wire_bytes_per_device": coll.total_wire_bytes,
+        "hlo_lines": hlo_text.count("\n"),
+    }
+
+
+def _depth_variant(cfg, arch: str, n: int, lram_log2: int):
+    """A depth-n (units for hybrid) unrolled variant of the same cell."""
+    over = {"scan_layers": False}
+    if cfg.family == "hybrid":
+        over["num_layers"] = n * cfg.hybrid_pattern
+    elif cfg.family == "encdec":
+        over["num_layers"] = n
+        over["encoder_layers"] = n
+    else:
+        over["num_layers"] = n
+    small = configs.get_config(arch, **over)
+    if lram_log2:
+        small = configs.with_lram(small, lram_log2, layer=1)
+    return small
+
+
+def _full_depth_units(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.hybrid_pattern
+    return cfg.num_layers
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             lram_log2: int = 0, save_hlo: bool = False,
+             unroll: bool = True, overrides: dict | None = None) -> dict:
+    """One dry-run cell.
+
+    Always: full-depth *scanned* lower+compile on the target mesh — this is
+    the partitioning proof and the memory_analysis source (scan is also the
+    deployment configuration).  Additionally (single-pod roofline cells):
+    two reduced-depth *unrolled* compiles; XLA's cost_analysis counts a
+    while-loop body once, so exact FLOP/byte/collective totals come from
+    the linear depth extrapolation  F(L) = F(L1) + (L-L1)*(F(L2)-F(L1))/(L2-L1).
+    """
+    mesh_name = "multi" if multi_pod else "single"
+    cfg = configs.get_config(arch, **(overrides or {}))
+    if lram_log2:
+        cfg = configs.with_lram(cfg, lram_log2)
+    result = {
+        "arch": cfg.name, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok",
+    }
+    reason = shapes_lib.skip_reason(cfg, shape_name)
+    if reason:
+        result.update(status="skipped", reason=reason)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.distributed import context
+    context.set_mesh(mesh)
+    hlo_path = None
+    if save_hlo:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        hlo_path = os.path.join(
+            ARTIFACT_DIR, f"{cfg.name}__{shape_name}__{mesh_name}.hlo.txt")
+    full = _compile_and_measure(cfg, shape_name, mesh, hlo_path)
+    result.update({
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "mesh_shape": dict(mesh.shape),
+        "scanned": full,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    })
+
+    if unroll and not multi_pod:
+        l1, l2 = (1, 2) if cfg.family == "hybrid" else (2, 4)
+        m1 = _compile_and_measure(
+            _depth_variant(cfg, arch, l1, lram_log2), shape_name, mesh)
+        m2 = _compile_and_measure(
+            _depth_variant(cfg, arch, l2, lram_log2), shape_name, mesh)
+        lf = _full_depth_units(cfg)
+
+        def extrap(a, b):
+            if a is None or b is None:
+                return None
+            return a + (b - a) / (l2 - l1) * (lf - l1)
+
+        wire_kinds = set(m1["collective_wire_bytes"]) | set(
+            m2["collective_wire_bytes"])
+        result["extrapolated"] = {
+            "from_depths": [l1, l2, lf],
+            "flops_per_device": extrap(m1["flops_per_device"],
+                                       m2["flops_per_device"]),
+            "bytes_per_device": extrap(m1["bytes_per_device"],
+                                       m2["bytes_per_device"]),
+            "collective_wire_bytes": {
+                k: extrap(m1["collective_wire_bytes"].get(k, 0.0),
+                          m2["collective_wire_bytes"].get(k, 0.0))
+                for k in sorted(wire_kinds)
+            },
+            "total_wire_bytes_per_device": extrap(
+                m1["total_wire_bytes_per_device"],
+                m2["total_wire_bytes_per_device"]),
+            "depth_compiles": {"l1": m1, "l2": m2},
+        }
+    return result
+
+
+def _artifact_path(arch, shape, mesh_name, lram_log2=0):
+    name = arch if not lram_log2 else f"{arch}+lram{lram_log2}"
+    return os.path.join(ARTIFACT_DIR, f"{name}__{shape}__{mesh_name}.json")
+
+
+def main(argv=None):
+    global ARTIFACT_DIR
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None,
+                   choices=list(shapes_lib.SHAPES) + [None])
+    p.add_argument("--mesh", default="single",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--lram-log2", type=int, default=0,
+                   help="insert the paper's LRAM block (memory slots 2^N)")
+    p.add_argument("--force", action="store_true",
+                   help="recompute cells that already have artifacts")
+    p.add_argument("--scan", action="store_true",
+                   help="keep lax.scan over layers (faster compile, but "
+                        "cost_analysis undercounts loop bodies)")
+    p.add_argument("--save-hlo", action="store_true")
+    p.add_argument("--out", default=ARTIFACT_DIR)
+    args = p.parse_args(argv)
+
+    ARTIFACT_DIR = args.out
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = [(a, s) for a in configs.ARCHS
+                 for s in shapes_lib.SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for multi_pod in meshes:
+            mesh_name = "multi" if multi_pod else "single"
+            path = _artifact_path(arch, shape, mesh_name, args.lram_log2)
+            if os.path.exists(path) and not args.force:
+                print(f"[skip-cached] {path}")
+                continue
+            print(f"[cell] {arch} x {shape} x {mesh_name} ...", flush=True)
+            try:
+                res = run_cell(arch, shape, multi_pod, args.lram_log2,
+                               args.save_hlo, unroll=not args.scan)
+            except Exception as e:
+                res = {
+                    "arch": arch, "shape": shape, "mesh": mesh_name,
+                    "status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-3000:],
+                }
+                failures += 1
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            ex = res.get("extrapolated", {})
+            print(f"  -> {res['status']} "
+                  f"(compile {res.get('scanned', {}).get('compile_s', '-')}s"
+                  f", flops/dev {ex.get('flops_per_device', '-')})",
+                  flush=True)
+    print(f"done; {failures} failures")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,245 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD forward: the sequence is split into chunks of length Q; within a
+chunk the recurrence is computed as a (masked, decay-weighted) Q x Q
+attention-like matmul (MXU-friendly), and a single (N, P) state per head is
+carried across chunks with a lax.scan — O(S Q) work, O(S) memory, exactly
+equivalent to the sequential recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T ,   y_t = C_t h_t + D x_t
+
+(tested against the naive oracle in tests/test_mamba2.py).  The sequential
+form is also implemented for single-token decode (O(1) per token, the reason
+the `long_500k` cell is runnable for SSM/hybrid archs).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.models.config import ModelConfig
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    p = cfg.ssm_headdim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = di + 2 * g * n
+    return di, h, p, g, n, conv_ch
+
+
+def mamba_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    di, h, p, g, n, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    proj_dim = 2 * di + 2 * g * n + h  # z, x, B, C, dt
+    # dt bias: softplus^-1 of dt ~ U[1e-3, 1e-1]
+    rng = np.random.default_rng(0)
+    dt = np.exp(
+        rng.uniform(np.log(1e-3), np.log(1e-1), size=(h,))
+    ).astype(np.float32)
+    dt_bias = dt + np.log(-np.expm1(-dt))
+    return {
+        "in_proj": nn.dense_init(ks[0], d, proj_dim, use_bias=False,
+                                 dtype=dtype),
+        "conv": nn.fan_in_init()(ks[1], (cfg.ssm_conv, conv_ch), dtype),
+        "A_log": jnp.asarray(
+            np.log(rng.uniform(1.0, 16.0, size=(h,))), dtype=jnp.float32
+        ),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.asarray(dt_bias),
+        "norm": nn.rmsnorm_init(di, dtype=dtype),
+        "out_proj": nn.dense_init(ks[2], di, d, use_bias=False, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],  # (K, 1, C)
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out.astype(x.dtype)
+
+
+def _split_proj(params, u, cfg: ModelConfig):
+    di, h, p, g, n, conv_ch = _dims(cfg)
+    zxbcdt = nn.dense(params["in_proj"], u)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + conv_ch]
+    dt_raw = zxbcdt[..., di + conv_ch :]
+    return z, xbc, dt_raw
+
+
+def _post_conv(xbc, dt_raw, params, cfg: ModelConfig):
+    di, h, p, g, n, conv_ch = _dims(cfg)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    x = xbc[..., :di]
+    B = xbc[..., di : di + g * n]
+    C = xbc[..., di + g * n :]
+    lead = x.shape[:-1]
+    x = x.reshape(*lead, h, p)
+    B = B.reshape(*lead, g, n)
+    C = C.reshape(*lead, g, n)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"]
+    )  # (..., h)
+    return x, B, C, dt
+
+
+def ssd_chunked(x, B, C, dt, A, *, chunk: int,
+                h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x: (b, S, h, p); B, C: (b, S, g, n); dt: (b, S, h); A: (h,) negative.
+    Returns y: (b, S, h, p) and final state (b, h, n, p).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    q = chunk
+
+    xr = x.reshape(b, nc, q, h, p).astype(jnp.float32)
+    Br = B.reshape(b, nc, q, g, n).astype(jnp.float32)
+    Cr = C.reshape(b, nc, q, g, n).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, q, h)
+
+    l = dtr * A  # log decay, (b,nc,q,h), negative
+    cl = jnp.cumsum(l, axis=2)  # inclusive
+    cl_last = cl[:, :, -1:, :]  # (b,nc,1,h)
+
+    dx = xr * dtr[..., None]  # dt-weighted inputs
+
+    # intra-chunk: scores_ij = (C_i . B_j) * exp(cl_i - cl_j) * [j <= i]
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", Cr, Br)  # (b,nc,g,q,k)
+    cb = jnp.repeat(cb, hg, axis=2)  # group -> heads: (b,nc,h,q,k)
+    decay = jnp.exp(
+        cl[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+        - cl[:, :, None, :, :].transpose(0, 1, 4, 2, 3)
+    )  # (b,nc,h,q,k) = exp(cl_i - cl_j)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    scores = jnp.where(mask, cb * decay, 0.0)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores, dx)
+
+    # chunk summary state: sum_j exp(cl_last - cl_j) B_j (dx_j)^T
+    decay_end = jnp.exp(cl_last - cl)  # (b,nc,q,h)
+    Bh = jnp.repeat(Br, hg, axis=3)  # (b,nc,q,h,n): group -> heads
+    chunk_state = jnp.einsum(
+        "bcqhn,bcqhp,bcqh->bchnp", Bh, dx, decay_end
+    )
+
+    # carry states across chunks
+    h_init = (
+        jnp.zeros((b, h, n, p), jnp.float32) if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    chunk_decay = jnp.exp(cl_last[:, :, 0, :])  # (b,nc,h)
+
+    def step(hc, inputs):
+        cs, cd = inputs  # (b,h,n,p), (b,h)
+        h_next = hc * cd[:, :, None, None] + cs
+        return h_next, hc  # emit state at chunk START
+
+    cs_seq = jnp.moveaxis(chunk_state, 1, 0)  # (nc,b,h,n,p)
+    cd_seq = jnp.moveaxis(chunk_decay, 1, 0)  # (nc,b,h)
+    h_final, h_starts = jax.lax.scan(step, h_init, (cs_seq, cd_seq))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)  # (b,nc,h,n,p)
+
+    # inter-chunk: y_i += exp(cl_i) * C_i . h_start
+    Ch = jnp.repeat(Cr, hg, axis=3)  # (b,nc,q,h,n)
+    y_inter = jnp.einsum(
+        "bcqhn,bchnp,bcqh->bcqhp", Ch, h_starts, jnp.exp(cl)
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, h_final
+
+
+def ssd_sequential(x, B, C, dt, A, *, h0=None):
+    """Naive O(S) sequential recurrence — oracle + decode path."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    hstate = (
+        jnp.zeros((b, h, n, p), jnp.float32) if h0 is None
+        else h0.astype(jnp.float32)
+    )
+
+    def step(hs, t):
+        xt, Bt, Ct, dtt = t  # (b,h,p), (b,g,n), (b,g,n), (b,h)
+        a = jnp.exp(dtt * A)  # (b,h)
+        Bh = jnp.repeat(Bt, hg, axis=1)  # (b,h,n)
+        Ch = jnp.repeat(Ct, hg, axis=1)
+        upd = jnp.einsum("bhn,bhp->bhnp", Bh, xt * dtt[..., None])
+        hs = hs * a[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", Ch, hs)
+        return hs, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, hstate, xs)
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+def mamba_apply(params, u: jax.Array, cfg: ModelConfig,
+                *, chunked: bool = True):
+    """Full-sequence forward. u: (B, S, d_model)."""
+    di, h, p, g, n, conv_ch = _dims(cfg)
+    z, xbc, dt_raw = _split_proj(params, u, cfg)
+    xbc = _causal_conv(xbc, params["conv"])
+    x, B, C, dt = _post_conv(xbc, dt_raw, params, cfg)
+    A = -jnp.exp(params["A_log"])
+    if chunked and u.shape[1] % cfg.ssm_chunk == 0 and u.shape[1] > 1:
+        y, _ = ssd_chunked(x, B, C, dt, A, chunk=cfg.ssm_chunk)
+    else:
+        y, _ = ssd_sequential(x, B, C, dt, A)
+    y = y + params["D"][:, None] * x.astype(jnp.float32)
+    y = y.reshape(*u.shape[:-1], di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = nn.rmsnorm(params["norm"], y)
+    return nn.dense(params["out_proj"], y.astype(u.dtype))
+
+
+def mamba_cache_shapes(cfg: ModelConfig, batch: int):
+    di, h, p, g, n, conv_ch = _dims(cfg)
+    return {
+        "ssm": (batch, h, n, p),
+        "conv": (batch, cfg.ssm_conv - 1, conv_ch),
+    }
+
+
+def mamba_decode(params, u: jax.Array, cfg: ModelConfig, cache):
+    """One token. u: (B, 1, d). cache: {'ssm': (B,h,n,p), 'conv': (B,K-1,C)}."""
+    di, h, p, g, n, conv_ch = _dims(cfg)
+    z, xbc, dt_raw = _split_proj(params, u, cfg)
+    # causal conv over (stored window + current)
+    win = jnp.concatenate([cache["conv"], xbc.astype(jnp.float32)], axis=1)
+    w = params["conv"].astype(jnp.float32)  # (K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", win, w)[:, None, :]
+    new_conv = win[:, 1:, :]
+    x, B, C, dt = _post_conv(conv_out, dt_raw, params, cfg)
+    A = -jnp.exp(params["A_log"])
+    y, h_new = ssd_sequential(x, B, C, dt, A, h0=cache["ssm"])
+    y = y + params["D"][:, None] * x.astype(jnp.float32)
+    y = y.reshape(*u.shape[:-1], di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = nn.rmsnorm(params["norm"], y)
+    out = nn.dense(params["out_proj"], y.astype(u.dtype))
+    return out, {"ssm": h_new, "conv": new_conv}

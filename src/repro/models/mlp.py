@@ -1,0 +1,39 @@
+"""Dense feed-forward blocks: SwiGLU (llama family) and GELU (BERT/GPT2)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.models.config import ModelConfig
+
+
+def mlp_init(key, cfg: ModelConfig, *, dtype=jnp.float32,
+             d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "wi_gate": nn.dense_init(ks[0], d, f, use_bias=cfg.mlp_bias,
+                                     dtype=dtype),
+            "wi_up": nn.dense_init(ks[1], d, f, use_bias=cfg.mlp_bias,
+                                   dtype=dtype),
+            "wo": nn.dense_init(ks[2], f, d, use_bias=cfg.mlp_bias,
+                                dtype=dtype),
+        }
+    return {
+        "wi": nn.dense_init(ks[0], d, f, use_bias=cfg.mlp_bias, dtype=dtype),
+        "wo": nn.dense_init(ks[1], f, d, use_bias=cfg.mlp_bias, dtype=dtype),
+    }
+
+
+def mlp_apply(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.act == "swiglu":
+        g = nn.dense(params["wi_gate"], x)
+        u = nn.dense(params["wi_up"], x)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = nn.dense(params["wi"], x)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return nn.dense(params["wo"], h)

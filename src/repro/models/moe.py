@@ -1,0 +1,188 @@
+"""Top-k sparse Mixture-of-Experts (Mixtral / Phi-3.5-MoE).
+
+Capacity-based, sort-free dispatch designed for GSPMD sharding:
+
+  1. router logits -> top-k experts + renormalised gate weights per token,
+  2. position-in-expert via an exclusive cumulative sum over the one-hot
+     assignment matrix (no data-dependent shapes: tokens beyond the expert's
+     capacity C are *dropped*, the standard TPU MoE discipline),
+  3. scatter-add token copies into an (E, C, d) buffer, batched expert FFN
+     as one einsum over stacked expert weights (E is sharded on the `model`
+     mesh axis = expert parallelism), gather back and weight by gates.
+
+Also emits the switch-style load-balancing auxiliary loss.  SMoE is the
+paper's O(sqrt N) comparison point (§5): LRAM replaces exactly this block
+when `lram_layers` covers an MoE layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.distributed import context
+from repro.models.config import ModelConfig
+
+
+def moe_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, kg, ku, ko = jax.random.split(key, 4)
+    init = nn.fan_in_init()
+    if cfg.act == "swiglu":
+        experts = {
+            "wi_gate": init(kg, (e, d, f), dtype),
+            "wi_up": init(ku, (e, d, f), dtype),
+            "wo": init(ko, (e, f, d), dtype),
+        }
+    else:
+        experts = {"wi": init(kg, (e, d, f), dtype),
+                   "wo": init(ko, (e, f, d), dtype)}
+    return {
+        "router": nn.dense_init(kr, d, e, use_bias=False, dtype=dtype),
+        "experts": experts,
+    }
+
+
+def _expert_ffn(experts, xb: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """xb: (E, C, d) -> (E, C, d), one batched einsum per projection."""
+    if cfg.act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xb, experts["wi_gate"].astype(xb.dtype))
+        u = jnp.einsum("ecd,edf->ecf", xb, experts["wi_up"].astype(xb.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xb.dtype) * u
+    else:
+        h = jnp.einsum("ecd,edf->ecf", xb, experts["wi"].astype(xb.dtype))
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(xb.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, experts["wo"].astype(h.dtype))
+
+
+def moe_apply(params, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    GShard-style grouping: each sequence is its own dispatch group with
+    capacity C = cf * S * k / E.  All dispatch tensors keep the batch dim
+    leading, so under GSPMD the scatter/gather partition cleanly on the
+    `data` axis while experts stay on `model` (EP) — nothing global, no
+    cross-shard cumsum."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k_experts
+
+    logits = nn.dense(params["router"], x).astype(jnp.float32)  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)              # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # ---- load-balancing auxiliary loss (Switch) ---------------------------
+    me = probs.mean(axis=(0, 1))                                 # (E,)
+    onehot_top1 = jax.nn.one_hot(expert_ids[..., 0], e, dtype=jnp.float32)
+    ce = onehot_top1.mean(axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    # ---- per-sequence capacity & position-in-expert -----------------------
+    cap = int(max(1, cfg.capacity_factor * s * k / e))
+    ids = expert_ids.reshape(b, s * k)                           # (B, S*k)
+    gts = gate_vals.reshape(b, s * k)
+    onehot = jax.nn.one_hot(ids, e, dtype=jnp.int32)             # (B, S*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    pos_in_e = jnp.take_along_axis(pos, ids[..., None], axis=2)[..., 0]
+    keep = (pos_in_e < cap).astype(jnp.float32)                  # (B, S*k)
+    slot = jnp.where(pos_in_e < cap, ids * cap + pos_in_e, 0)    # (B, S*k)
+
+    # ---- dispatch / expert compute / combine (batch dim stays leading) ----
+    # Every scatter/gather operand is pinned to the batch=data layout so the
+    # partitioner recognises dim 0 (iota indices) as a parallel scatter dim
+    # and keeps the dispatch local to each data shard.  When E divides the
+    # model axis (true expert parallelism) the flattened (E*cap) slot dim
+    # additionally rides `model`: the scatter/gather then IS the
+    # token<->expert exchange and everything else stays local.
+    B = context.batch_axes()
+    mesh = context.get_mesh()
+    e_div = mesh is None or e % mesh.shape["model"] == 0
+    # with true EP (E % model == 0) GSPMD partitions the dispatch well on
+    # its own; the constraints below repair only the TP-within-expert path
+    c = (lambda x, *_: x) if e_div else context.constrain
+    src = jnp.repeat(jnp.arange(s), k)                           # (S*k,)
+    xsrc = jnp.take(x, src, axis=1)                              # (B, S*k, d)
+    contrib = xsrc * keep[..., None].astype(x.dtype)
+    contrib = c(contrib, B, None, None)
+    bi = jnp.broadcast_to(jnp.arange(b)[:, None], slot.shape)
+    buf = jnp.zeros((b, e * cap, d), x.dtype).at[bi, slot].add(contrib)
+    buf = c(buf, B, None, None)
+    yb = _expert_ffn_grouped(
+        params["experts"], buf.reshape(b, e, cap, d), cfg
+    )
+    flat = c(yb.reshape(b, e * cap, d), B, None, None)
+    gathered = flat[bi, slot]                                    # (B, S*k, d)
+    gathered = c(gathered, B, None, None)
+    wts = (gts * keep).astype(x.dtype)
+    y = jnp.zeros_like(x).at[
+        bi, jnp.broadcast_to(src[None], slot.shape)
+    ].add(gathered * wts[..., None])
+    y = c(y, B, None, None)
+    return y, aux
+
+
+def _expert_ffn_grouped(experts, xb: jax.Array, cfg: ModelConfig):
+    """xb: (B, E, C, d) -> (B, E, C, d); E contracts against stacked expert
+    weights, B stays on `data`.
+
+    The sharding constraints pin the activation layout to
+    (batch=data, expert/hidden=model): without them GSPMD may contract over
+    an FSDP-sharded weight dim and all-reduce activation-sized partials
+    (42 TiB/step on mixtral — EXPERIMENTS.md §Perf iteration 2)."""
+    B = context.batch_axes()
+    e_div = context.get_mesh() is None or (
+        cfg.num_experts % context.get_mesh().shape["model"] == 0
+    )
+    if e_div:
+        # true expert parallelism: GSPMD already handles the E-sharded
+        # einsums well (phi-3.5 path) — constraints only hurt here
+        def c(x, *_):
+            return x
+        spec_h = ()
+    else:
+        # TP within each expert: pin (batch=data, hidden=model) so GSPMD
+        # cannot contract over the FSDP-sharded weight dim
+        c = context.constrain
+        spec_h = (B, None, None, "model")
+        xb = c(xb, B, None, None, None)
+    if cfg.act == "swiglu":
+        g = jnp.einsum("becd,edf->becf", xb,
+                       experts["wi_gate"].astype(xb.dtype))
+        u = jnp.einsum("becd,edf->becf", xb,
+                       experts["wi_up"].astype(xb.dtype))
+        g = c(g, *spec_h)
+        u = c(u, *spec_h)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xb.dtype) * u
+    else:
+        h = jnp.einsum("becd,edf->becf", xb, experts["wi"].astype(xb.dtype))
+        h = c(h, *spec_h)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(xb.dtype)
+    out = jnp.einsum("becf,efd->becd", h, experts["wo"].astype(h.dtype))
+    return c(out, B, None, None, None)
+
+
+def moe_apply_dense_reference(params, x: jax.Array, cfg: ModelConfig):
+    """O(E)-compute oracle: run every expert on every token, mask by gates.
+    Used only in tests (no capacity drops -> compare with cf large)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k_experts
+    xf = x.reshape(-1, d)
+    logits = nn.dense(params["router"], xf).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    gates = jnp.zeros_like(probs)
+    for i in range(k):
+        gates = gates + gate_vals[:, i : i + 1] * jax.nn.one_hot(
+            expert_ids[:, i], e, dtype=jnp.float32
+        )
+    outs = _expert_ffn(
+        params["experts"],
+        jnp.broadcast_to(xf, (e,) + xf.shape),
+        cfg,
+    )  # (E, T, d)
+    y = jnp.einsum("te,etd->td", gates.astype(xf.dtype), outs)
+    return y.reshape(b, s, d)

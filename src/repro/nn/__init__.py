@@ -1,0 +1,26 @@
+"""Minimal functional NN substrate (no external deps).
+
+Params are nested dicts of jax arrays; every layer is an (init, apply) pair.
+Mutable per-layer state (batchnorm running stats) is threaded explicitly as a
+separate pytree so train/serve steps stay pure.  Partition rules match on
+param-tree paths (see repro.distributed.sharding).
+"""
+
+from repro.nn.core import (  # noqa: F401
+    Initializer,
+    dense,
+    dense_init,
+    embedding_init,
+    fan_in_init,
+    layernorm,
+    layernorm_init,
+    rmsnorm,
+    rmsnorm_init,
+    batchnorm,
+    batchnorm_init,
+    truncated_normal_init,
+    zeros_init,
+    ones_init,
+    param_count,
+    tree_paths,
+)

@@ -1,0 +1,152 @@
+"""Core functional layers: dense, norms, embeddings, initializers."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Initializer = Callable[[jax.Array, tuple[int, ...], jnp.dtype], jax.Array]
+
+
+def truncated_normal_init(stddev: float = 1.0) -> Initializer:
+    def init(key, shape, dtype=jnp.float32):
+        unscaled = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+        return (unscaled * stddev).astype(dtype)
+
+    return init
+
+
+def fan_in_init(scale: float = 1.0) -> Initializer:
+    """LeCun-style: stddev = scale / sqrt(fan_in) with fan_in = shape[0]."""
+
+    def init(key, shape, dtype=jnp.float32):
+        stddev = scale / np.sqrt(max(1, shape[0]))
+        unscaled = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+        return (unscaled * stddev).astype(dtype)
+
+    return init
+
+
+def zeros_init() -> Initializer:
+    return lambda key, shape, dtype=jnp.float32: jnp.zeros(shape, dtype)
+
+
+def ones_init() -> Initializer:
+    return lambda key, shape, dtype=jnp.float32: jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def dense_init(
+    key,
+    in_dim: int,
+    out_dim: int,
+    *,
+    use_bias: bool = True,
+    dtype=jnp.float32,
+    kernel_init: Initializer | None = None,
+):
+    kernel_init = kernel_init or fan_in_init()
+    p = {"kernel": kernel_init(key, (in_dim, out_dim), dtype)}
+    if use_bias:
+        p["bias"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["kernel"].astype(x.dtype)
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, dim: int, *, dtype=jnp.float32):
+    return {"embedding": truncated_normal_init(1.0)(key, (vocab, dim), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, *, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, *, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def batchnorm_init(dim: int, *, dtype=jnp.float32):
+    params = {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    state = {"mean": jnp.zeros((dim,), jnp.float32),
+             "var": jnp.ones((dim,), jnp.float32)}
+    return params, state
+
+
+def batchnorm(params, state, x, *, train: bool, momentum: float = 0.99,
+              eps: float = 1e-5):
+    """Feature-wise batchnorm over all leading dims. Returns (y, new_state).
+
+    At pod scale the statistics are per-host-batch (standard large-scale
+    practice); the running stats are carried in the model state pytree.
+    """
+    x32 = x.astype(jnp.float32)
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x32, axis=axes)
+        var = jnp.var(x32, axis=axes)
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities
+# ---------------------------------------------------------------------------
+
+def tree_paths(tree) -> list[tuple[str, jax.Array]]:
+    """Flatten a params tree to ('a/b/c', leaf) pairs."""
+    out = []
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(l.shape)) for _, l in tree_paths(tree))

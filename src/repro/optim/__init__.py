@@ -1,0 +1,12 @@
+from repro.optim.adam import (  # noqa: F401
+    OptimConfig,
+    adam_init,
+    adam_update,
+    global_norm,
+    schedule_lr,
+)
+from repro.optim.compression import (  # noqa: F401
+    CompressionState,
+    compress_gradients,
+    compression_init,
+)

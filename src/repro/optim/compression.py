@@ -1,0 +1,73 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Two codecs for the data-parallel all-reduce:
+
+  * int8   — per-leaf-block symmetric quantization (4x bandwidth saving on
+             f32 grads); the quantization residual is fed back into the next
+             step's gradient (error feedback, Seide et al. / EF-SGD), which
+             keeps SGD/Adam convergence intact.
+  * topk   — magnitude top-k sparsification (keep fraction rho), residual
+             accumulated likewise.
+
+The codec is applied to gradients before the optimizer; on a mesh the
+quantized representation is what crosses the DP axis (see
+repro.distributed.collectives.compressed_psum for the wire form).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionState:
+    kind: str  # none | int8 | topk
+    rho: float = 0.01  # topk keep fraction
+
+
+def compression_init(params, kind: str = "none", rho: float = 0.01):
+    if kind == "none":
+        return {"kind": kind, "residual": None}
+    residual = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"kind": kind, "rho": rho, "residual": residual}
+
+
+def _quant_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_mask(g, rho: float):
+    flat = jnp.abs(g).reshape(-1)
+    k = max(1, int(rho * flat.shape[0]))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def compress_gradients(grads, comp_state):
+    """Returns (decompressed_grads, new_comp_state)."""
+    kind = comp_state["kind"]
+    if kind == "none":
+        return grads, comp_state
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        if kind == "int8":
+            sent = _quant_int8(g32)
+        elif kind == "topk":
+            sent = _topk_mask(g32, comp_state["rho"])
+        else:
+            raise ValueError(kind)
+        return sent.astype(g.dtype), g32 - sent
+
+    out = jax.tree.map(one, grads, comp_state["residual"])
+    sent = jax.tree.map(lambda x: x[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda x: x[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return sent, dict(comp_state, residual=resid)

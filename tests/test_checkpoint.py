@@ -1,0 +1,105 @@
+"""Checkpointing: roundtrip, atomicity, corruption fallback, async, retention."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+@pytest.fixture
+def tree(rng):
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(8, 4)).astype("f")),
+                   "b": jnp.asarray(rng.normal(size=(4,)).astype("f"))},
+        "opt": {"step": jnp.asarray(17, jnp.int32)},
+    }
+
+
+def test_roundtrip(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(100, tree)
+    step, restored = mgr.restore(tree)
+    assert step == 100
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        tree, restored,
+    )
+
+
+def test_latest_and_retention(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_corrupted_checkpoint_falls_back(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, tree)
+    mgr.save(2, tree)
+    # corrupt the newest: truncate a leaf file
+    d = os.path.join(str(tmp_path), "step_000000000002")
+    leaf = [f for f in os.listdir(d) if f.endswith(".npy")][0]
+    with open(os.path.join(d, leaf), "wb") as f:
+        f.write(b"garbage")
+    step, restored = mgr.restore(tree)
+    assert step == 1  # silently fell back to the newest VALID checkpoint
+    assert restored is not None
+
+
+def test_interrupted_save_leaves_no_partial(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    # simulate a crash mid-save: a lingering .tmp dir must be ignored
+    os.makedirs(os.path.join(str(tmp_path), "step_000000000002.tmp"))
+    assert mgr.latest_step() == 1
+    step, _ = mgr.restore(tree)
+    assert step == 1
+
+
+def test_async_save(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, tree, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 5
+    step, restored = mgr.restore(tree)
+    assert step == 5
+
+
+def test_restore_with_dtype_cast(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    like = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+        if a.dtype == jnp.float32 else a,
+        tree,
+    )
+    step, restored = mgr.restore(like)
+    assert restored["params"]["w"].dtype == jnp.bfloat16
+
+
+def test_missing_leaf_raises(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    bigger = dict(tree)
+    bigger["extra"] = jnp.zeros((2,))
+    with pytest.raises(KeyError):
+        mgr.restore(bigger)
+
+
+def test_manifest_contents(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(9, tree)
+    with open(os.path.join(str(tmp_path), "step_000000000009",
+                           "manifest.json")) as f:
+        man = json.load(f)
+    assert man["step"] == 9
+    assert "params/w" in man["leaves"]
+    assert man["leaves"]["params/w"]["shape"] == [8, 4]

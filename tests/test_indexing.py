@@ -1,0 +1,80 @@
+"""The O(1) bijection between lattice points on the torus and [0, N)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import indexing, lattice
+
+
+def test_choose_torus_counts():
+    for log2 in (16, 18, 20, 24):
+        spec = indexing.choose_torus(log2)
+        assert spec.num_locations == 2**log2
+        assert all(k >= 8 and k % 4 == 0 for k in spec.K)
+
+
+def test_choose_torus_too_small():
+    with pytest.raises(ValueError):
+        indexing.choose_torus(15)
+
+
+def test_bad_wrap_lengths():
+    with pytest.raises(ValueError):
+        indexing.TorusSpec((4,) * 8)  # wrap < kernel diameter
+    with pytest.raises(ValueError):
+        indexing.TorusSpec((10,) * 8)  # not divisible by 4
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.integers(0, 2**18 - 1))
+def test_roundtrip_random_indices(idx):
+    spec = indexing.choose_torus(18)
+    pts = indexing.decode_index(np.array([idx]), spec)
+    assert lattice.is_lattice_point(pts).all()
+    assert np.all(pts >= 0) and np.all(pts < np.array(spec.K))
+    back = np.asarray(indexing.encode_points(jnp.asarray(pts), spec))
+    assert back[0] == idx
+
+
+def test_roundtrip_dense_block():
+    spec = indexing.choose_torus(16)
+    idx = np.arange(2**16)
+    pts = indexing.decode_index(idx, spec)
+    assert lattice.is_lattice_point(pts).all()
+    # all distinct lattice points
+    assert len({tuple(p) for p in pts}) == 2**16
+    back = np.asarray(indexing.encode_points(jnp.asarray(pts), spec))
+    np.testing.assert_array_equal(back, idx)
+
+
+def test_wrap_invariance(rng):
+    spec = indexing.choose_torus(18)
+    idx = rng.integers(0, 2**18, size=200)
+    pts = indexing.decode_index(idx, spec)
+    shifts = rng.integers(-3, 4, size=(200, 8)) * np.array(spec.K)
+    back = np.asarray(indexing.encode_points(jnp.asarray(pts + shifts), spec))
+    np.testing.assert_array_equal(back, idx)
+
+
+def test_negative_coordinates(rng):
+    """Neighbors straight from the decoder can have negative coords."""
+    spec = indexing.choose_torus(16)
+    q = rng.uniform(-4, 4, size=(500, 8)).astype(np.float32)
+    nb, w = lattice.neighbors_and_weights(jnp.asarray(q))
+    idx = np.asarray(indexing.encode_points(nb, spec))
+    assert idx.min() >= 0 and idx.max() < spec.num_locations
+
+
+def test_distinct_neighbors_get_distinct_indices(rng):
+    """Within one query's kernel support, the 232 candidates never collide
+    on the torus (wrap length >= kernel diameter)."""
+    spec = indexing.choose_torus(16)  # smallest torus: K=(8,)*8
+    q = rng.uniform(0, 8, size=(50, 8)).astype(np.float32)
+    nb, w = map(np.asarray, lattice.neighbors_and_weights(jnp.asarray(q)))
+    idx = np.asarray(indexing.encode_points(jnp.asarray(nb), spec))
+    for i in range(50):
+        live = idx[i][w[i] > 0]
+        assert len(set(live.tolist())) == len(live)

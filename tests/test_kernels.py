@@ -1,0 +1,130 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import indexing, lattice
+from repro.kernels import e8_lookup, gather_interp, ops, ref
+
+SPEC = indexing.choose_torus(16)
+
+
+def test_sort_network_is_a_sorting_network():
+    """0-1 principle: a comparator network sorts all inputs iff it sorts
+    every binary sequence. 2^8 = 256 cases, exhaustive."""
+    bits = np.array(
+        list(itertools.product([0.0, 1.0], repeat=8)), dtype=np.float32
+    ).T  # (8, 256)
+    keys, _ = e8_lookup._sort_rows_desc(jnp.asarray(bits), [jnp.asarray(bits)])
+    keys = np.asarray(keys)
+    assert np.all(np.diff(keys, axis=0) <= 0), "network failed to sort"
+
+
+def test_sort_network_tracks_permutation(rng):
+    x = rng.normal(size=(8, 50)).astype(np.float32)
+    iota = np.broadcast_to(np.arange(8)[:, None], (8, 50)).astype(np.int32)
+    keys, (vals, perm) = e8_lookup._sort_rows_desc(
+        jnp.asarray(np.abs(x)), [jnp.asarray(x), jnp.asarray(iota)]
+    )
+    keys, vals, perm = map(np.asarray, (keys, vals, perm))
+    for b in range(50):
+        np.testing.assert_allclose(vals[:, b], x[perm[:, b], b])
+        np.testing.assert_allclose(keys[:, b], np.abs(x[perm[:, b], b]))
+
+
+@pytest.mark.parametrize("n_queries", [1, 5, 128, 200])
+@pytest.mark.parametrize("top_k", [8, 32])
+def test_query_kernel_matches_ref(rng, n_queries, top_k):
+    q = rng.uniform(-4, 12, size=(n_queries, 8)).astype(np.float32)
+    idx_p, w_p = e8_lookup.lram_query_pallas(
+        jnp.asarray(q), SPEC, top_k, interpret=True
+    )
+    idx_r, w_r = ref.lram_query_ref(jnp.asarray(q), SPEC, top_k)
+    # weights as multisets (ties can reorder equal weights)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(w_p), axis=-1),
+        np.sort(np.asarray(w_r), axis=-1),
+        atol=1e-5,
+    )
+    # interpolation result identical through a fixed table
+    values = rng.normal(size=(SPEC.num_locations, 16)).astype(np.float32)
+    out_p = ref.gather_interp_ref(jnp.asarray(values), idx_p, w_p)
+    out_r = ref.gather_interp_ref(jnp.asarray(values), idx_r, w_r)
+    np.testing.assert_allclose(
+        np.asarray(out_p), np.asarray(out_r), rtol=2e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m", [8, 64])
+def test_gather_kernel_matches_ref(rng, dtype, m):
+    values = jnp.asarray(
+        rng.normal(size=(1024, m)).astype(np.float32)
+    ).astype(dtype)
+    idx = jnp.asarray(rng.integers(0, 1024, size=(17, 32)).astype(np.int32))
+    w = jnp.asarray(rng.uniform(0, 1, size=(17, 32)).astype(np.float32))
+    out_p = gather_interp.gather_interp_pallas(values, idx, w, interpret=True)
+    out_r = ref.gather_interp_ref(values, idx, w)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out_p), np.asarray(out_r, dtype=np.float32), rtol=tol,
+        atol=tol,
+    )
+
+
+def test_query_kernel_batched_leading_dims(rng):
+    q = rng.uniform(0, 8, size=(3, 4, 8)).astype(np.float32)
+    idx, w = e8_lookup.lram_query_pallas(jnp.asarray(q), SPEC, interpret=True)
+    assert idx.shape == (3, 4, 32) and w.shape == (3, 4, 32)
+
+
+def test_fused_lookup_grads_match_autodiff(rng):
+    values = jnp.asarray(
+        rng.normal(size=(SPEC.num_locations, 8)).astype(np.float32)
+    )
+    q = jnp.asarray(rng.uniform(0, 8, size=(40, 8)).astype(np.float32))
+
+    def loss_pallas(v, qq):
+        return jnp.sum(ops.lram_lookup(v, qq, SPEC, 32, True, True) ** 2)
+
+    def loss_ref(v, qq):
+        return jnp.sum(ref.lookup_ref(v, qq, SPEC, 32) ** 2)
+
+    out_p = ops.lram_lookup(values, q, SPEC, 32, True, True)
+    out_r = ref.lookup_ref(values, q, SPEC, 32)
+    np.testing.assert_allclose(
+        np.asarray(out_p), np.asarray(out_r), rtol=1e-5, atol=1e-5
+    )
+    gv, gq = jax.grad(loss_pallas, argnums=(0, 1))(values, q)
+    gv_r, gq_r = jax.grad(loss_ref, argnums=(0, 1))(values, q)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(gv_r), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(gq), np.asarray(gq_r), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_fused_lookup_interpolation_property(rng):
+    """phi(k) = v_k through the full Pallas path."""
+    values = jnp.asarray(
+        rng.normal(size=(SPEC.num_locations, 8)).astype(np.float32)
+    )
+    targets = np.array([7, 999, 2**15], dtype=np.int64)
+    pts = indexing.decode_index(targets, SPEC).astype(np.float32)
+    out = ops.lram_lookup(values, jnp.asarray(pts), SPEC, 32, True, True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(values)[targets], atol=1e-5
+    )
+
+
+def test_nearest_image_delta():
+    q = jnp.asarray(np.array([[0.5] * 8], dtype=np.float32))
+    k = jnp.asarray(np.array([[7.5, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5]],
+                             dtype=np.float32))
+    d = ops._nearest_image_delta(q, k, (8,) * 8)
+    np.testing.assert_allclose(
+        np.asarray(d)[0], [1.0, 0, 0, 0, 0, 0, 0, 0], atol=1e-6
+    )

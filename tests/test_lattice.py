@@ -1,0 +1,199 @@
+"""Pin the lattice implementation to the paper's exact constants (§2.4-2.6)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import lattice
+
+
+# ---------------------------------------------------------------------------
+# Structure of Lambda
+# ---------------------------------------------------------------------------
+
+def test_shell_sizes_match_e8_theta_series():
+    shells = lattice.shell_vectors()
+    nsq = (shells**2).sum(1)
+    # E8 theta series: 240 vectors of (scaled) norm^2 8, 2160 of norm^2 16
+    assert (nsq == 0).sum() == 1
+    assert (nsq == 8).sum() == 240
+    assert (nsq == 16).sum() == 2160
+    assert lattice.is_lattice_point(shells).all()
+
+
+def test_minimum_distance_and_radii():
+    shells = lattice.shell_vectors()
+    nsq = (shells**2).sum(1)
+    assert nsq[nsq > 0].min() == 8  # min distance sqrt(8)
+    assert lattice.PACKING_RADIUS == pytest.approx(np.sqrt(8) / 2)
+    assert lattice.COVERING_RADIUS == 2.0
+
+
+def test_fundamental_region_candidates_exactly_232():
+    assert lattice.candidate_table().shape == (232, lattice.DIM)
+
+
+def test_candidate_distance_gap_is_clean():
+    """No shell point has d(p,F)^2 within 1e-3 of the cut — the count of 232
+    is robust, not a numerical accident."""
+    d2 = lattice.distance_sq_to_fundamental_region(
+        lattice.shell_vectors().astype(np.float64)
+    )
+    near_cut = np.abs(d2 - lattice.RADIUS_SQ) < 1e-3
+    assert np.all(np.abs(d2[near_cut] - lattice.RADIUS_SQ) < 1e-7)
+    assert (d2 < 8 - 1e-3).sum() == 232
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+def test_decode_returns_true_nearest_point(rng):
+    q = rng.uniform(-20, 20, size=(500, 8)).astype(np.float32)
+    c = np.asarray(lattice.decode(jnp.asarray(q)))
+    assert lattice.is_lattice_point(c.astype(np.int64)).all()
+    shells = lattice.shell_vectors()
+    for i in range(0, 500, 7):
+        pts = c[i].astype(np.int64) + shells
+        d2 = ((pts - q[i]) ** 2).sum(1)
+        dc = ((c[i] - q[i]) ** 2).sum()
+        assert dc <= d2.min() + 1e-4
+
+
+def test_decode_fixed_points():
+    pts = np.array(
+        [[0] * 8, [2, 2, 0, 0, 0, 0, 0, 0], [1] * 8, [4, 0, 0, 0, 0, 0, 0, 0],
+         [3, 1, 1, 1, 1, 1, 1, -1]],
+        dtype=np.float32,
+    )
+    assert lattice.is_lattice_point(pts.astype(np.int64)).all()
+    out = np.asarray(lattice.decode(jnp.asarray(pts)))
+    np.testing.assert_array_equal(out, pts)
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(st.floats(-50, 50, width=32), min_size=8, max_size=8))
+def test_decode_within_covering_radius(coords):
+    q = jnp.asarray(np.array(coords, dtype=np.float32))
+    c = lattice.decode(q)
+    assert float(jnp.sum((q - c) ** 2)) <= lattice.COVERING_RADIUS**2 + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Canonicalization
+# ---------------------------------------------------------------------------
+
+def test_canonicalize_lands_in_F_and_is_isometric(rng):
+    q = rng.uniform(-10, 10, size=(300, 8)).astype(np.float32)
+    c = np.asarray(lattice.decode(jnp.asarray(q)))
+    t = q - c
+    z, perm, sgn = map(np.asarray, lattice.canonicalize(jnp.asarray(t)))
+    assert np.all(np.diff(z[:, :7], axis=1) <= 1e-6)
+    assert np.all(z[:, 6] >= np.abs(z[:, 7]) - 1e-6)
+    assert np.all(z[:, 0] + z[:, 1] <= 2 + 1e-5)
+    assert np.all(z.sum(1) <= 4 + 1e-5)
+    # isometry: |z| is a permutation of |t|, and reconstruction is exact
+    np.testing.assert_allclose(
+        np.sort(np.abs(z), axis=1), np.sort(np.abs(t), axis=1), atol=1e-6
+    )
+    tp = np.take_along_axis(t, perm, axis=1)
+    np.testing.assert_allclose(z, sgn * tp, atol=1e-6)
+    # even number of sign flips
+    assert np.all(np.prod(sgn, axis=1) > 0)
+
+
+# ---------------------------------------------------------------------------
+# Kernel support statistics (paper Table 1 + §2.5) — the paper's own numbers
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mc_weights():
+    rng = np.random.default_rng(42)
+    q = rng.uniform(0, 16, size=(60_000, 8)).astype(np.float32)
+    f = jax.jit(lattice.neighbors_and_weights)
+    ws = []
+    for i in range(0, len(q), 20_000):
+        _, w = f(jnp.asarray(q[i : i + 20_000]))
+        ws.append(np.asarray(w))
+    return np.concatenate(ws)
+
+
+def test_kernel_support_stats(mc_weights):
+    counts = (mc_weights > 0).sum(1)
+    # paper Table 1 (E8 column): min 45 (m.c.), avg 64.94, max 121
+    assert counts.max() <= 121
+    assert counts.min() >= 40
+    assert abs(counts.mean() - lattice.MEAN_SUPPORT) < 0.5
+    # analytic mean = V_8(sqrt 8)/det = pi^4*4096/24/256
+    assert lattice.MEAN_SUPPORT == pytest.approx(64.9393, abs=1e-3)
+
+
+def test_weight_bounds(mc_weights):
+    s = mc_weights.sum(1)
+    # paper §2.5: 0.851 <= w(x) <= 1
+    assert s.min() >= lattice.WEIGHT_LOWER_BOUND - 1e-4
+    assert s.max() <= 1.0 + 1e-5
+
+
+def test_top32_weight_fraction(mc_weights):
+    s = mc_weights.sum(1)
+    top = np.sort(mc_weights, axis=1)[:, -32:].sum(1)
+    frac = top / s
+    # paper §2.6: top-32 carries >=90% always, ~99.5% on average
+    assert frac.min() >= 0.90
+    assert frac.mean() >= 0.99
+
+
+def test_weight_is_one_at_lattice_points_and_deep_holes():
+    pts = np.array(
+        [[0] * 8, [2, 2, 0, 0, 0, 0, 0, 0], [1] * 8,  # lattice points
+         [2, 0, 0, 0, 0, 0, 0, 0], [0, 2, 0, 0, 0, 0, 0, 0]],  # deep holes
+        dtype=np.float32,
+    )
+    _, w = lattice.neighbors_and_weights(jnp.asarray(pts))
+    np.testing.assert_allclose(np.asarray(w).sum(1), 1.0, atol=1e-5)
+
+
+def test_deep_hole_support_is_16_equal_weights():
+    """At a deep hole, exactly 16 points at distance 2 contribute 1/16 each."""
+    dh = jnp.asarray(np.array([[2, 0, 0, 0, 0, 0, 0, 0]], dtype=np.float32))
+    _, w = lattice.neighbors_and_weights(dh)
+    w = np.asarray(w)[0]
+    nz = w[w > 0]
+    assert len(nz) == 16
+    np.testing.assert_allclose(nz, 1.0 / 16.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Completeness: candidate pipeline == brute force
+# ---------------------------------------------------------------------------
+
+def test_neighbor_enumeration_complete(rng):
+    q = rng.uniform(-8, 24, size=(100, 8)).astype(np.float32)
+    nb, w = map(np.asarray, lattice.neighbors_and_weights(jnp.asarray(q)))
+    for i in range(100):
+        oracle_pts, oracle_d2 = lattice.brute_force_neighbors(q[i])
+        got = {
+            tuple(p): wi
+            for p, wi in zip(nb[i].astype(np.int64), w[i])
+            if wi > 0
+        }
+        want = {
+            tuple(p): float(lattice.kernel_from_sq(jnp.asarray(d)))
+            for p, d in zip(oracle_pts, oracle_d2)
+        }
+        assert set(got) == set(want)
+        for k in got:
+            assert got[k] == pytest.approx(want[k], abs=1e-5)
+
+
+def test_kernel_function_values():
+    assert float(lattice.kernel_from_sq(jnp.asarray(0.0))) == 1.0
+    assert float(lattice.kernel_from_sq(jnp.asarray(8.0))) == 0.0
+    assert float(lattice.kernel_from_sq(jnp.asarray(12.0))) == 0.0
+    assert float(lattice.kernel_from_sq(jnp.asarray(4.0))) == pytest.approx(
+        0.5**4
+    )

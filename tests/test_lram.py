@@ -1,0 +1,129 @@
+"""LRAM layer behaviour: shapes, sparsity, interpolation, O(1) access."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import indexing, lram
+
+KEY = jax.random.PRNGKey(0)
+CFG = lram.LRAMConfig(log2_locations=16, m=8, heads=4, query_norm="rms")
+
+
+@pytest.fixture(scope="module")
+def layer():
+    params, state = lram.lram_init(KEY, CFG)
+    return params, state
+
+
+def test_shapes_and_finiteness(layer):
+    params, state = layer
+    x = jax.random.normal(KEY, (3, 5, CFG.in_dim))
+    y, _ = lram.lram_apply(params, state, x, CFG)
+    assert y.shape == (3, 5, CFG.out_dim)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_value_gradient_sparsity(layer):
+    """dL/dvalues touches at most top_k * heads rows per example."""
+    params, state = layer
+    batch = 16
+    x = jax.random.normal(KEY, (batch, CFG.in_dim))
+
+    def loss(p):
+        y, _ = lram.lram_apply(p, state, x, CFG)
+        return jnp.sum(y**2)
+
+    g = jax.grad(loss)(params)["values"]
+    nnz = int((jnp.abs(g).sum(1) > 0).sum())
+    assert 0 < nnz <= CFG.top_k * CFG.heads * batch
+
+
+def test_interpolation_property():
+    """phi(k) = v_k: a query exactly on a lattice point returns its value."""
+    spec = CFG.torus_spec
+    target = 4321
+    pt = indexing.decode_index(np.array([target]), spec)[0].astype(np.float32)
+    idx, w = lram.indices_and_weights(jnp.asarray(pt[None]), spec, CFG.top_k)
+    idx, w = np.asarray(idx), np.asarray(w)
+    assert w[0].sum() == pytest.approx(1.0, abs=1e-5)
+    assert idx[0, np.argmax(w[0])] == target
+    assert w[0].max() == pytest.approx(1.0, abs=1e-5)
+
+
+def test_gather_interp_matches_dense_einsum(rng):
+    values = jnp.asarray(rng.normal(size=(1000, 16)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 1000, size=(4, 7, 32)))
+    w = jnp.asarray(rng.normal(size=(4, 7, 32)).astype(np.float32))
+    out = lram.gather_interp(values, idx, w)
+    onehot = jax.nn.one_hot(idx, 1000)
+    expected = jnp.einsum("...k,...kn,nm->...m", w, onehot, values)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), atol=1e-4)
+
+
+def test_output_scales_with_input_magnitude(layer):
+    """theta(lambda z) = lambda theta(z) survives through the whole layer
+    (with rms query norm disabled — use query_norm='none')."""
+    cfg = lram.LRAMConfig(log2_locations=16, m=8, heads=4, query_norm="none")
+    params, state = lram.lram_init(KEY, cfg)
+    x = jax.random.normal(KEY, (8, cfg.in_dim))
+    y1, _ = lram.lram_apply(params, state, x, cfg)
+    y2, _ = lram.lram_apply(params, state, 2.0 * x, cfg)
+    np.testing.assert_allclose(np.asarray(2.0 * y1), np.asarray(y2), atol=1e-4)
+
+
+def test_flops_independent_of_memory_size():
+    """Table 3/4: compiled FLOPs for the lookup must not grow with N."""
+    flops = {}
+    for log2 in (16, 20):
+        cfg = lram.LRAMConfig(log2_locations=log2, m=8, heads=4,
+                              query_norm="rms")
+        params, state = lram.lram_init(jax.random.PRNGKey(1), cfg)
+        x = jax.random.normal(KEY, (64, cfg.in_dim))
+
+        def f(v, x, cfg=cfg, params=params, state=state):
+            p = dict(params)
+            p["values"] = v
+            y, _ = lram.lram_apply(p, state, x, cfg)
+            return y
+
+        lowered = jax.jit(f).lower(params["values"], x)
+        cost = lowered.compile().cost_analysis()
+        flops[log2] = cost.get("flops", 0.0)
+    assert flops[20] <= flops[16] * 1.02 + 1e5  # O(1) in N
+
+
+def test_memffn_block_shapes():
+    width = 64
+    cfg = lram.memffn_config(width, 16, query_norm="rms")
+    assert cfg.in_dim == width and cfg.out_dim == 4 * width
+    params, state = lram.memffn_init(KEY, width, cfg)
+    x = jax.random.normal(KEY, (6, width))
+    y, _ = lram.memffn_apply(params, state, x, cfg)
+    assert y.shape == (6, width)
+
+
+def test_batchnorm_query_path():
+    cfg = lram.LRAMConfig(log2_locations=16, m=8, heads=4, query_norm="batch")
+    params, state = lram.lram_init(KEY, cfg)
+    x = jax.random.normal(KEY, (32, cfg.in_dim))
+    y, st1 = lram.lram_apply(params, state, x, cfg, train=True)
+    # running stats moved
+    assert not np.allclose(np.asarray(st1["qnorm"]["mean"]), 0.0)
+    y2, st2 = lram.lram_apply(params, st1, x, cfg, train=False)
+    assert st2["qnorm"] is st1["qnorm"] or np.allclose(
+        np.asarray(st2["qnorm"]["mean"]), np.asarray(st1["qnorm"]["mean"])
+    )
+    assert bool(jnp.isfinite(y2).all())
+
+
+def test_access_tracking_for_utilisation(layer):
+    params, state = layer
+    x = jax.random.normal(KEY, (16, CFG.in_dim))
+    y, _, (idx, w) = lram.lram_apply(
+        params, state, x, CFG, return_access=True
+    )
+    assert idx.shape == (16, CFG.heads, CFG.top_k)
+    assert w.shape == idx.shape
+    assert int(idx.min()) >= 0 and int(idx.max()) < CFG.num_locations

@@ -1,0 +1,112 @@
+"""Optimizer: Adam correctness vs numpy reference, param groups, compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+
+
+def numpy_adam(params, grads, steps, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = {k: np.zeros_like(v) for k, v in params.items()}
+    v_ = {k: np.zeros_like(v) for k, v in params.items()}
+    p = {k: v.copy() for k, v in params.items()}
+    for t in range(1, steps + 1):
+        for k in p:
+            g = grads[k]
+            m[k] = b1 * m[k] + (1 - b1) * g
+            v_[k] = b2 * v_[k] + (1 - b2) * g * g
+            mhat = m[k] / (1 - b1**t)
+            vhat = v_[k] / (1 - b2**t)
+            p[k] -= lr * mhat / (np.sqrt(vhat) + eps)
+    return p
+
+
+def test_adam_matches_numpy_reference(rng):
+    params = {"a": rng.normal(size=(8, 4)).astype(np.float32),
+              "b": rng.normal(size=(16,)).astype(np.float32)}
+    grads = {"a": rng.normal(size=(8, 4)).astype(np.float32),
+             "b": rng.normal(size=(16,)).astype(np.float32)}
+    cfg = optim.OptimConfig(lr=1e-2, grad_clip=0.0, memory_lr_mult=1.0)
+    jp = jax.tree.map(jnp.asarray, params)
+    st = optim.adam_init(jp)
+    for _ in range(5):
+        jp, st, _ = optim.adam_update(
+            jax.tree.map(jnp.asarray, grads), st, jp, cfg
+        )
+    want = numpy_adam(params, grads, 5, 1e-2)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(jp[k]), want[k], rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_memory_param_group_gets_10x_lr(rng):
+    params = {
+        "dense": {"kernel": jnp.zeros((4, 4))},
+        "lram": {"values": jnp.zeros((16, 4))},
+    }
+    grads = jax.tree.map(lambda p: jnp.ones_like(p), params)
+    cfg = optim.OptimConfig(lr=1e-3, memory_lr_mult=10.0, grad_clip=0.0)
+    st = optim.adam_init(params)
+    new, _, _ = optim.adam_update(grads, st, params, cfg)
+    # first Adam step moves by exactly lr * mult (mhat/sqrt(vhat) = 1)
+    step_dense = float(jnp.abs(new["dense"]["kernel"]).mean())
+    step_mem = float(jnp.abs(new["lram"]["values"]).mean())
+    assert step_mem / step_dense == pytest.approx(10.0, rel=1e-3)
+
+
+def test_grad_clipping():
+    params = {"a": jnp.zeros((4,))}
+    grads = {"a": jnp.full((4,), 100.0)}
+    cfg = optim.OptimConfig(lr=1.0, grad_clip=1.0, memory_lr_mult=1.0)
+    st = optim.adam_init(params)
+    _, _, stats = optim.adam_update(grads, st, params, cfg)
+    assert float(stats["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_schedules():
+    cfg = optim.OptimConfig(lr=1.0, schedule="cosine", warmup_steps=10,
+                            total_steps=100)
+    lrs = [float(optim.schedule_lr(cfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 50, 100]]
+    assert lrs[0] < lrs[1] < lrs[2]          # warmup rises
+    assert lrs[2] > lrs[3] > lrs[4]          # cosine decays
+    assert lrs[4] == pytest.approx(0.0, abs=1e-6)
+
+
+def test_int8_compression_error_feedback_preserves_sum(rng):
+    """Error feedback: sum of transmitted grads converges to sum of true
+    grads (residual stays bounded)."""
+    g = jnp.asarray(rng.normal(size=(256,)).astype(np.float32)) * 1e-3
+    params = {"w": jnp.zeros((256,))}
+    comp = optim.compression_init(params, "int8")
+    total_sent = jnp.zeros((256,))
+    for _ in range(20):
+        sent, comp = optim.compress_gradients({"w": g}, comp)
+        total_sent = total_sent + sent["w"]
+    resid = np.abs(np.asarray(comp["residual"]["w"]))
+    np.testing.assert_allclose(
+        np.asarray(total_sent) + np.asarray(comp["residual"]["w"]),
+        np.asarray(20 * g), rtol=1e-4, atol=1e-6,
+    )
+    assert resid.max() < float(jnp.abs(g).max())  # bounded residual
+
+
+def test_topk_compression_sparsity(rng):
+    g = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+    params = {"w": jnp.zeros((1000,))}
+    comp = optim.compression_init(params, "topk", rho=0.05)
+    sent, comp = optim.compress_gradients({"w": g}, comp)
+    nnz = int((sent["w"] != 0).sum())
+    assert nnz <= 60  # ~5% of 1000 (ties may add a few)
+    # dense after enough rounds: residual keeps the rest
+    assert float(jnp.abs(comp["residual"]["w"]).sum()) > 0
+
+
+def test_compression_none_passthrough():
+    params = {"w": jnp.ones((4,))}
+    comp = optim.compression_init(params, "none")
+    g = {"w": jnp.full((4,), 3.0)}
+    sent, comp2 = optim.compress_gradients(g, comp)
+    assert sent is g and comp2 is comp

@@ -1,0 +1,92 @@
+"""Torus activation (paper §2.3): homogeneity, continuity, ranges."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import indexing, torus
+
+SPEC = indexing.choose_torus(18)
+
+
+def test_output_ranges(rng):
+    x = rng.normal(size=(256, 16)).astype(np.float32)
+    q, s = torus.torus_map(jnp.asarray(x), SPEC.K)
+    q, s = np.asarray(q), np.asarray(s)
+    assert q.shape == (256, 8) and s.shape == (256, 1)
+    assert q.min() >= 0 and np.all(q < np.array(SPEC.K))
+    assert np.all(s > 0)
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    st.lists(st.floats(-5, 5, width=32), min_size=16, max_size=16),
+    st.floats(0.01, 100.0),
+)
+def test_positive_homogeneity(coords, lam):
+    """theta(lambda z) = lambda theta(z): same torus point, scaled output.
+
+    (Exact above the numerical-safety floor at |z| ~ 1e-10; below it the
+    output is clamped to ~0, which is the Lipschitz-continuity behaviour.)"""
+    arr = np.array(coords, dtype=np.float32)
+    mags = np.sqrt(arr[:8] ** 2 + arr[8:] ** 2)
+    from hypothesis import assume
+
+    assume(float(mags.min()) > 1e-3)
+    x = jnp.asarray(arr)
+    q1, s1 = torus.torus_map(x, SPEC.K)
+    q2, s2 = torus.torus_map(lam * x, SPEC.K)
+    # circular distance: scaling can flip the atan2 branch cut by one ulp
+    diff = np.abs(np.asarray(q1) - np.asarray(q2))
+    circ = np.minimum(diff, np.array(SPEC.K, dtype=np.float32) - diff)
+    assert circ.max() < 1e-2
+    np.testing.assert_allclose(
+        lam * np.asarray(s1), np.asarray(s2), rtol=1e-4
+    )
+
+
+def test_scale_formula_matches_paper(rng):
+    """scale = (sum_i 1/|z_i|)^{-1} exactly."""
+    x = rng.normal(size=(64, 16)).astype(np.float64)
+    re, im = x[:, :8], x[:, 8:]
+    mags = np.sqrt(re**2 + im**2)
+    expected = 1.0 / (1.0 / mags).sum(1)
+    _, s = torus.torus_map(jnp.asarray(x.astype(np.float32)), SPEC.K)
+    np.testing.assert_allclose(np.asarray(s)[:, 0], expected, rtol=1e-5)
+
+
+def test_continuous_at_origin():
+    """Output scale -> 0 as any z_i -> 0 (Lipschitz continuity)."""
+    x = np.ones((4, 16), dtype=np.float32)
+    x[1, 0] = x[1, 8] = 1e-8  # z_1 ~ 0
+    x[2] = 0.0
+    x[3] *= 1e-9
+    _, s = torus.torus_map(jnp.asarray(x), SPEC.K)
+    s = np.asarray(s)[:, 0]
+    assert s[1] < 1e-7 and s[2] < 1e-7 and s[3] < 1e-7
+
+
+def test_gradients_finite_everywhere(rng):
+    x = rng.normal(size=(32, 16)).astype(np.float32)
+    x[0] = 0.0  # degenerate point
+    x[1, 3] = 0.0
+
+    def f(x):
+        q, s = torus.torus_map(x, SPEC.K)
+        return jnp.sum(jnp.sin(q) * s)
+
+    g = jax.grad(f)(jnp.asarray(x))
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_angle_maps_to_expected_coordinate():
+    # z_1 = exp(i*pi/2) -> q_1 = K_1/4
+    x = np.zeros((1, 16), dtype=np.float32)
+    x[0, 8:] = 1.0  # purely imaginary: arg = pi/2 for all entries
+    q, _ = torus.torus_map(jnp.asarray(x), SPEC.K)
+    np.testing.assert_allclose(
+        np.asarray(q)[0], np.array(SPEC.K) / 4.0, rtol=1e-6
+    )
