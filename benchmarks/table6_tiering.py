@@ -1,0 +1,98 @@
+"""Table 6 (beyond-paper): tiered memory — hit rate & latency vs cache size.
+
+Sweeps the device-cache fraction of a host-offloaded value table
+(repro.memstore) under a decode-like access stream (a drifting hot set with
+a cold random tail — the locality regime the serve path produces) and
+reports per-lookup latency with the measured cache hit rate, against the
+dense device-resident gather as the reference row.
+
+    PYTHONPATH=src python -m benchmarks.run table6
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lram
+from repro.memstore import TieredSpec, TieredValueStore
+
+NUM_ROWS = 2**16
+M = 64
+SHARD_ROWS = 2048          # 32 shards
+BATCH, TOP_K = 256, 32
+STEPS, WARMUP = 12, 3
+FRACTIONS = (0.125, 0.25, 0.5, 1.0)
+
+
+def _stream(rng, steps, *, hot=True):
+    """Decode-like access pattern: a hot window drifting across the torus
+    (consecutive decode steps revisit nearby lattice buckets).  hot=False
+    is the adversarial uniform stream — no locality for the cache to find."""
+    hot_span = NUM_ROWS // 8
+    center = 0
+    for _ in range(steps):
+        if not hot:
+            yield rng.integers(0, NUM_ROWS, (BATCH, TOP_K)).astype(np.int32)
+            continue
+        center = (center + rng.integers(0, NUM_ROWS // 16)) % NUM_ROWS
+        yield ((center + rng.integers(0, hot_span, (BATCH, TOP_K)))
+               % NUM_ROWS).astype(np.int32)
+
+
+def _time_stream(gather, rng, *, hot=True):
+    times = []
+    for t, idx in enumerate(_stream(rng, STEPS, hot=hot)):
+        w = rng.normal(size=idx.shape).astype(np.float32)
+        t0 = time.perf_counter()
+        out = gather(idx, w)
+        jax.block_until_ready(out)
+        if t >= WARMUP:
+            times.append(time.perf_counter() - t0)
+    return 1e6 * float(np.mean(times))
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    dense = rng.normal(size=(NUM_ROWS, M)).astype(np.float32) * 0.02
+
+    dense_dev = jnp.asarray(dense)
+    ref = jax.jit(lram.gather_interp)
+    us = _time_stream(lambda i, w: ref(dense_dev, jnp.asarray(i),
+                                       jnp.asarray(w)),
+                      np.random.default_rng(1))
+    rows.append(("tiering_dense_reference", us, "hit=1.0 resident=1.0"))
+
+    num_shards = NUM_ROWS // SHARD_ROWS
+    for frac in FRACTIONS:
+        slots = max(1, int(num_shards * frac))
+        store = TieredValueStore.from_dense(
+            dense, TieredSpec(shard_rows=SHARD_ROWS, cache_slots=slots)
+        )
+        store.warm()
+        store.reset_stats()
+        us = _time_stream(store.gather, np.random.default_rng(1))
+        rows.append((
+            f"tiering_cache_{frac:g}",
+            us,
+            f"hit={store.hit_rate():.3f} "
+            f"evictions={store.stats['evictions']} "
+            f"uncached={store.stats['uncached']}",
+        ))
+
+    # adversarial reference: uniform accesses, nothing for LRU to exploit
+    store = TieredValueStore.from_dense(
+        dense, TieredSpec(shard_rows=SHARD_ROWS, cache_slots=num_shards // 4)
+    )
+    store.warm()
+    store.reset_stats()
+    us = _time_stream(store.gather, np.random.default_rng(1), hot=False)
+    rows.append((
+        "tiering_cache_0.25_uniform", us,
+        f"hit={store.hit_rate():.3f} uncached={store.stats['uncached']}",
+    ))
+    return rows

@@ -18,6 +18,15 @@ Guarantees:
     (mesh-reshape restart).  At fleet scale each host would read only its
     shard slices; here leaves are small enough to round-trip via host numpy.
   * retention   — keep the newest `keep` checkpoints.
+  * tiered      — `repro.memstore.TieredValueStore` leaves are saved by
+    *streaming* host shards to `<leaf>.shards/shard_NNNNNN.npy` one at a
+    time (dirty cache slots flushed first), so a host-offloaded table
+    checkpoints without ever being materialized on device — or even as a
+    second host copy.  Restore streams shards back into the live store
+    in place.  A store referenced from several tree positions (params +
+    Adam moments share the node) is written once and cross-referenced.
+    Saves containing tiered stores are forced blocking: the store keeps
+    training-mutable state, so the async snapshot trick does not apply.
 """
 
 from __future__ import annotations
@@ -31,6 +40,8 @@ import zlib
 import jax
 import numpy as np
 
+from repro.memstore import TieredValueStore
+
 _MANIFEST = "manifest.json"
 
 
@@ -38,14 +49,72 @@ def _mangle(path: str) -> str:
     return path.replace("/", "__") + ".npy"
 
 
+def _is_store(x) -> bool:
+    return isinstance(x, TieredValueStore)
+
+
 def _tree_items(tree):
-    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_store)
     items = []
     for path, leaf in flat:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                         for p in path)
         items.append((name, leaf))
     return items
+
+
+class _StructureMismatch(KeyError):
+    """`like` asks for leaves the checkpoint does not have — a caller
+    error, re-raised instead of triggering newest-first fallback."""
+
+
+class _TieredLeaf:
+    """A verified, not-yet-loaded tiered table inside a checkpoint dir."""
+
+    def __init__(self, directory: str, meta: dict):
+        self.dir = directory
+        self.meta = meta
+
+    def shard_path(self, i: int) -> str:
+        return os.path.join(self.dir, self.meta["dir"], f"shard_{i:06d}.npy")
+
+    def _read_shard(self, i: int) -> np.ndarray:
+        """Load + checksum one shard — verify-while-loading, single read."""
+        arr = np.load(self.shard_path(i))
+        if zlib.crc32(np.ascontiguousarray(arr).tobytes()) \
+                != self.meta["crc32"][i]:
+            raise IOError(f"checksum mismatch for shard {i}")
+        return arr
+
+    def load_into(self, store: TieredValueStore,
+                  mutated: list | None = None) -> TieredValueStore:
+        meta = self.meta
+        if (meta["num_shards"] != store.num_shards
+                or meta["shard_rows"] != store.shard_rows
+                or meta["m"] != store.m):
+            raise ValueError(
+                f"tiered layout mismatch: checkpoint has "
+                f"{meta['num_shards']}x{meta['shard_rows']}x{meta['m']}, "
+                f"store is {store.num_shards}x{store.shard_rows}x{store.m}"
+            )
+        for i in range(meta["num_shards"]):
+            arr = self._read_shard(i)  # may raise: mark mutation first
+            if mutated is not None and store not in mutated:
+                mutated.append(store)
+            store.load_shard(i, arr)
+        return store
+
+    def materialize(self) -> np.ndarray:
+        """Concatenate shards into a dense host table (restore-into-dense)."""
+        meta = self.meta
+        out = np.empty(
+            (meta["num_shards"] * meta["shard_rows"], meta["m"]),
+            np.dtype(meta["dtype"]),
+        )
+        r = meta["shard_rows"]
+        for i in range(meta["num_shards"]):
+            out[i * r:(i + 1) * r] = self._read_shard(i)
+        return out
 
 
 class CheckpointManager:
@@ -59,14 +128,18 @@ class CheckpointManager:
 
     def save(self, step: int, tree, *, blocking: bool = True) -> None:
         # snapshot to host memory synchronously (device buffers may mutate)
-        host = [(name, np.asarray(jax.device_get(leaf)))
-                for name, leaf in _tree_items(tree)]
+        host, stores = [], []
+        for name, leaf in _tree_items(tree):
+            if _is_store(leaf):
+                stores.append((name, leaf))
+            else:
+                host.append((name, np.asarray(jax.device_get(leaf))))
         self.wait()  # one writer at a time (async or blocking)
-        if blocking:
-            self._write(step, host)
+        if blocking or stores:  # shard streaming reads live store state
+            self._write(step, host, stores)
         else:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host), daemon=True
+                target=self._write, args=(step, host, stores), daemon=True
             )
             self._thread.start()
 
@@ -75,7 +148,7 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, host_items) -> None:
+    def _write(self, step: int, host_items, store_items=()) -> None:
         final = os.path.join(self.dir, f"step_{step:012d}")
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
@@ -89,6 +162,31 @@ class CheckpointManager:
                 "shape": list(arr.shape),
                 "dtype": str(arr.dtype),
                 "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            }
+        seen: dict[int, str] = {}
+        for name, store in store_items:
+            if id(store) in seen:  # params + optimizer share the node
+                manifest["leaves"][name] = {
+                    "kind": "tiered_ref", "ref": seen[id(store)]
+                }
+                continue
+            seen[id(store)] = name
+            store.flush()
+            sub = _mangle(name) + ".shards"
+            os.makedirs(os.path.join(tmp, sub))
+            crcs = []
+            for i in range(store.num_shards):  # streamed, one shard at a time
+                arr = store.shard_host(i)
+                np.save(os.path.join(tmp, sub, f"shard_{i:06d}.npy"), arr)
+                crcs.append(zlib.crc32(np.ascontiguousarray(arr).tobytes()))
+            manifest["leaves"][name] = {
+                "kind": "tiered",
+                "dir": sub,
+                "num_shards": store.num_shards,
+                "shard_rows": store.shard_rows,
+                "m": store.m,
+                "dtype": str(store.dtype),
+                "crc32": crcs,
             }
         with open(os.path.join(tmp, _MANIFEST), "w") as f:
             json.dump(manifest, f)
@@ -126,12 +224,26 @@ class CheckpointManager:
         with open(os.path.join(d, _MANIFEST)) as f:
             manifest = json.load(f)
         out = {}
+        refs = {}
         for name, meta in manifest["leaves"].items():
-            arr = np.load(os.path.join(d, meta["file"]))
-            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
-            if crc != meta["crc32"]:
-                raise IOError(f"checksum mismatch for {name} at step {step}")
-            out[name] = arr
+            kind = meta.get("kind", "array")
+            if kind == "tiered":
+                # shards are checksummed while streaming into the target in
+                # restore() — a corrupt shard raises there, inside the same
+                # newest-first fallback loop (no second read of the table)
+                out[name] = _TieredLeaf(d, meta)
+            elif kind == "tiered_ref":
+                refs[name] = meta["ref"]
+            else:
+                arr = np.load(os.path.join(d, meta["file"]))
+                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                if crc != meta["crc32"]:
+                    raise IOError(
+                        f"checksum mismatch for {name} at step {step}"
+                    )
+                out[name] = arr
+        for name, target in refs.items():
+            out[name] = out[target]
         return out
 
     def restore(self, like, *, step: int | None = None, sharding=None):
@@ -140,42 +252,73 @@ class CheckpointManager:
         loads; `sharding` is a pytree (or single sharding) for elastic
         re-placement on a different mesh.
 
-        Returns (step, tree) or (None, None) if nothing restorable."""
+        Returns (step, tree) or (None, None) if nothing restorable.
+
+        Tiered shards are checksummed *while* streaming into the target
+        store (single read); a corrupt shard aborts that attempt and falls
+        back to the next-newest checkpoint, whose load overwrites every
+        shard again.  If every candidate fails AFTER a live store was
+        partially overwritten, restore raises instead of returning
+        (None, None) — silently training on a half-loaded table is worse
+        than stopping.
+        """
         steps = [step] if step is not None else self.all_steps()[::-1]
-        data = None
-        found = None
+        mutated: list = []
         for s in steps:
             try:
                 data = self._load_dir(s)
-                found = s
-                break
+                return s, self._assemble(like, data, s, sharding, mutated)
+            except _StructureMismatch:
+                raise  # `like` does not match the checkpoint: caller error
             except Exception:
                 continue
-        if data is None:
-            return None, None
+        if mutated:
+            raise IOError(
+                "no valid checkpoint found, and a tiered value store was "
+                "partially overwritten during failed restore attempts — "
+                "re-initialize it before training"
+            )
+        return None, None
 
+    def _assemble(self, like, data, found, sharding, mutated=None):
         names = [name for name, _ in _tree_items(like)]
         missing = [n for n in names if n not in data]
         if missing:
-            raise KeyError(f"checkpoint at step {found} missing: {missing[:5]}")
+            raise _StructureMismatch(
+                f"checkpoint at step {found} missing: {missing[:5]}"
+            )
 
-        flat_like, treedef = jax.tree_util.tree_flatten(like)
+        flat_like, treedef = jax.tree_util.tree_flatten(like, is_leaf=_is_store)
         shard_flat = (
-            jax.tree_util.tree_flatten(sharding)[0]
+            jax.tree_util.tree_flatten(sharding, is_leaf=_is_store)[0]
             if sharding is not None and not _is_single_sharding(sharding)
             else [sharding] * len(flat_like)
         )
         leaves = []
+        loaded_stores: set[int] = set()
         for name, proto, shd in zip(names, flat_like, shard_flat):
             arr = data[name]
+            if _is_store(proto):
+                if id(proto) not in loaded_stores:
+                    loaded_stores.add(id(proto))
+                    if isinstance(arr, _TieredLeaf):
+                        arr.load_into(proto, mutated)  # streamed, in place
+                    else:  # dense checkpoint -> tiered store
+                        if mutated is not None and proto not in mutated:
+                            mutated.append(proto)
+                        proto.load_dense(np.asarray(arr))
+                leaves.append(proto)
+                continue
+            if isinstance(arr, _TieredLeaf):  # tiered checkpoint -> dense
+                arr = arr.materialize()
             want = getattr(proto, "dtype", None)
             if want is not None and str(arr.dtype) != str(want):
                 arr = arr.astype(want)
-            if shd is not None:
+            if shd is not None and not _is_store(shd):
                 leaves.append(jax.device_put(arr, shd))
             else:
                 leaves.append(jax.numpy.asarray(arr))
-        return found, jax.tree_util.tree_unflatten(treedef, leaves)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def _is_single_sharding(s) -> bool:

@@ -36,6 +36,10 @@ PAPER_MODELS = (
     "lram-bert-large",
 )
 
+# beyond-paper configs: registered for get_config()/launchers, but kept out
+# of the per-arch smoke matrix (they have their own tier-1 coverage)
+EXTRA_MODELS = ("lram-tiered",)
+
 _MODULES = {
     "yi-9b": "yi_9b",
     "qwen2-1.5b": "qwen2_1_5b",
@@ -52,7 +56,12 @@ _MODULES = {
     "lram-bert-small": "lram_bert",
     "lram-bert-medium": "lram_bert",
     "lram-bert-large": "lram_bert",
+    "lram-tiered": "lram_tiered",
 }
+
+
+# every registered module is reachable from exactly one of the three lists
+assert set(_MODULES) == set(ARCHS) | set(PAPER_MODELS) | set(EXTRA_MODELS)
 
 
 def _module(name: str):

@@ -1,0 +1,65 @@
+"""Tiered-memory LRAM arch: the paper's memory layer with the value table
+host-offloaded behind a device hot cache (`interp_impl="tiered"`).
+
+This is the capacity configuration the dense `lram-bert-*` variants cannot
+reach: N is bounded by host RAM (or disk, with `backing="mmap"`), not HBM.
+The full config keeps 2^20 locations with a 32-shard cache (25% resident);
+the smoke config is sized so the table (16 MiB) exceeds the device-cache
+budget (4 MiB) — the regime tier-1 tests and `benchmarks/table6_tiering.py`
+exercise.  Causal-LM objective so the same config drives both
+`repro.launch.train` and `repro.launch.serve`.  See docs/memstore.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import lram as lram_mod
+from repro.memstore import TieredSpec
+from repro.models.config import ModelConfig
+
+
+def _base(vocab: int, w: int, layers: int) -> ModelConfig:
+    return ModelConfig(
+        name="lram-tiered",
+        family="dense",
+        num_layers=layers,
+        d_model=w,
+        num_heads=max(4, w // 64),
+        num_kv_heads=max(4, w // 64),
+        d_ff=2 * w,
+        vocab_size=vocab,
+        objective="clm",
+        # io_callback effects must run exactly once per step: no remat
+        remat=False,
+    )
+
+
+def _with_tiered(cfg: ModelConfig, log2: int, spec: TieredSpec) -> ModelConfig:
+    return dataclasses.replace(
+        cfg,
+        lram_layers=(cfg.num_layers // 2,),
+        lram=lram_mod.memffn_config(
+            cfg.d_model, log2, query_norm="batch",
+            interp_impl="tiered", tiered=spec,
+        ),
+    )
+
+
+def config() -> ModelConfig:
+    # 2^20 x 64 f32 = 256 MiB table; cache 32/128 shards = 25% resident
+    return _with_tiered(
+        _base(vocab=30000, w=512, layers=6),
+        log2=20,
+        spec=TieredSpec(shard_rows=8192, cache_slots=32),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    # table: 2^16 x 64 f32 = 16 MiB in 32 shards; device budget: 8 slots
+    # (4 MiB) -> N deliberately exceeds the cache, <50% resident
+    return _with_tiered(
+        _base(vocab=256, w=64, layers=2),
+        log2=16,
+        spec=TieredSpec(shard_rows=2048, cache_slots=8),
+    )

@@ -17,8 +17,13 @@ input-dependent-sparse: dL/dvalues has at most 32*h nonzero rows per token
 backward implements).
 
 Implementation selection: `interp_impl` swaps the pure-jnp reference path
-for the Pallas kernels (repro.kernels.ops) or the model-sharded path
-(repro.distributed.sharded_lram).
+for the Pallas kernels (repro.kernels.ops), the model-sharded path
+(repro.distributed.sharded_lram), or the tiered host-offloaded table
+(repro.memstore — `interp_impl="tiered"`, see docs/memstore.md).  It can be
+a callable (legacy hook) or a string naming a built-in implementation; the
+string can also be baked into the config (`LRAMConfig.interp_impl`), which
+is how `lram_init` knows to build the value table as a `TieredValueStore`
+instead of a dense device array.
 """
 
 from __future__ import annotations
@@ -43,6 +48,8 @@ class LRAMConfig:
     query_norm: str = "batch"  # batch | rms | none  (paper: batchnorm)
     value_init_scale: float = 0.02
     table_dtype: str = "float32"
+    interp_impl: str = "reference"  # reference | pallas | tiered
+    tiered: Any = None              # memstore.TieredSpec when interp_impl=tiered
 
     @property
     def torus_spec(self) -> indexing.TorusSpec:
@@ -117,6 +124,42 @@ def gather_interp(values: jax.Array, idx: jax.Array, w: jax.Array) -> jax.Array:
 InterpFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
 
 
+def _run_interp(values, idx, w, cfg: "LRAMConfig", override) -> jax.Array:
+    """Dispatch the gather+interpolate step.
+
+    `override` (the lram_apply argument) wins over `cfg.interp_impl`; it may
+    be a callable (legacy hook) or one of "reference" | "pallas" | "tiered".
+    A TieredValueStore in params always takes the tiered path — a dense
+    gather cannot read a host-offloaded table.
+    """
+    impl = override if override is not None else cfg.interp_impl
+    from repro import memstore  # deferred: keeps core importable standalone
+
+    if isinstance(values, memstore.TieredValueStore):
+        if callable(impl):
+            raise ValueError(
+                "callable interp_impl hooks cannot read a tiered value "
+                "table (they expect a dense (N, m) array); drop the "
+                "override to use the tiered lookup"
+            )
+        return memstore.tiered_interp(values, idx, w)
+    if callable(impl):
+        return impl(values, idx, w)
+    if impl == "tiered":
+        raise ValueError(
+            "interp_impl='tiered' needs params['values'] to be a "
+            "TieredValueStore — init the layer with "
+            "LRAMConfig(interp_impl='tiered')"
+        )
+    if impl in ("reference", "dense"):
+        return gather_interp(values, idx, w)
+    if impl == "pallas":
+        from repro.kernels import ops
+
+        return ops.make_interp_impl(cfg.torus_spec, cfg.top_k)(values, idx, w)
+    raise ValueError(f"unknown interp_impl {impl!r}")
+
+
 # ---------------------------------------------------------------------------
 # The layer
 # ---------------------------------------------------------------------------
@@ -125,11 +168,19 @@ def lram_init(key, cfg: LRAMConfig, *, dtype=jnp.float32):
     """Returns (params, state). State holds batchnorm running stats."""
     kv, _ = jax.random.split(key)
     table_dtype = jnp.dtype(cfg.table_dtype)
-    params: dict[str, Any] = {
-        "values": nn.truncated_normal_init(cfg.value_init_scale)(
-            kv, (cfg.num_locations, cfg.m), table_dtype
-        )
-    }
+    values = nn.truncated_normal_init(cfg.value_init_scale)(
+        kv, (cfg.num_locations, cfg.m), table_dtype
+    )
+    if cfg.interp_impl == "tiered":
+        # same RNG draw as the dense path, re-homed to host shards: a tiered
+        # layer is numerically identical to its dense twin at init
+        import numpy as np
+
+        from repro import memstore
+
+        spec = cfg.tiered or memstore.TieredSpec()
+        values = memstore.TieredValueStore.from_dense(np.asarray(values), spec)
+    params: dict[str, Any] = {"values": values}
     state: dict[str, Any] = {}
     if cfg.query_norm == "batch":
         params["qnorm"], state["qnorm"] = nn.batchnorm_init(
@@ -147,15 +198,16 @@ def lram_apply(
     cfg: LRAMConfig,
     *,
     train: bool = False,
-    interp_impl: InterpFn | None = None,
+    interp_impl: InterpFn | str | None = None,
     return_access: bool = False,
 ):
     """Apply the memory layer.
 
     Args:
       x: (..., 2*8*heads) inputs.
-      interp_impl: optional replacement for the gather+interpolate step
-        (Pallas kernel / sharded lookup).
+      interp_impl: optional override for the gather+interpolate step —
+        a callable hook (Pallas kernel / sharded lookup) or an impl name
+        ("reference" | "pallas" | "tiered"); defaults to cfg.interp_impl.
       return_access: additionally return (indices, weights) — used by the
         memory-utilisation analysis (paper Table 5).
 
@@ -184,8 +236,8 @@ def lram_apply(
     spec = cfg.torus_spec
     q, scale = torus.torus_map(xh.astype(jnp.float32), spec.K)
     idx, w = indices_and_weights(q, spec, cfg.top_k)
-    interp = interp_impl or gather_interp
-    out = interp(params["values"], idx, w)  # (..., heads, m)
+    out = _run_interp(params["values"], idx, w, cfg, interp_impl)
+    # (..., heads, m)
     out = out * scale
     y = out.reshape(*lead, cfg.out_dim).astype(x.dtype)
     if return_access:
@@ -226,7 +278,7 @@ def memffn_apply(
     cfg: LRAMConfig,
     *,
     train: bool = False,
-    interp_impl: InterpFn | None = None,
+    interp_impl: InterpFn | str | None = None,
 ):
     h = nn.dense(params["wi"], x)
     h, lram_state = lram_apply(

@@ -6,6 +6,17 @@
 Demonstrates the production serve path the decode_* dry-run cells lower:
 prefill -> KV caches -> repeated decode_step, with per-step latency stats
 (and a straggler-step report from the same monitor the trainer uses).
+
+Tiered memory (`lram-tiered` or any arch with `interp_impl="tiered"`): the
+cache is warmed before prefill, each decode step's lattice accesses
+prefetch the next step's shards (decode locality makes the previous step
+the best predictor — the fill into the hot-cache mirror the jitted lookup
+reads overlaps the next step's dense compute), and decode cache hit-rate
+(prefill reported separately) rides the step monitor.
+
+`--json` emits one machine-readable summary document: `rows` mirrors the
+benchmark harness columns (name, us_per_call, derived — see benchmarks/run),
+plus per-step decode latencies and the cache counters.
 """
 
 from __future__ import annotations
@@ -18,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, memstore
 from repro.distributed import fault
 from repro.models import transformer
 
@@ -31,6 +42,9 @@ def main(argv=None):
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--json", action="store_true",
+                   help="emit a machine-readable summary (benchmark-harness "
+                        "row format + per-step latency + cache hit-rate)")
     args = p.parse_args(argv)
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -41,6 +55,10 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
     key = jax.random.PRNGKey(args.seed)
     params, state = transformer.init(key, cfg)
+    stores = memstore.find_stores(params)
+    for _, store in stores:  # cache warmup before the first prefill
+        store.warm()
+        store.reset_stats()
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab_size,
                      size=(args.batch, args.prompt_len)),
@@ -56,8 +74,15 @@ def main(argv=None):
         ).astype(np.float32))
     logits, cache = transformer.prefill(params, state, batch, cfg, max_len)
     prefill_s = time.time() - t0
-    print(json.dumps({"prefill_sec": round(prefill_s, 3),
-                      "tokens": args.batch * args.prompt_len}))
+    # decode hit-rate must not be diluted by prefill's cold misses
+    prefill_hit = (round(
+        float(np.mean([s.hit_rate() for _, s in stores])), 4
+    ) if stores else None)
+    for _, store in stores:
+        store.reset_stats()
+    if not args.json:
+        print(json.dumps({"prefill_sec": round(prefill_s, 3),
+                          "tokens": args.batch * args.prompt_len}))
 
     step = jax.jit(
         lambda tok, pos, cache: transformer.decode_step(
@@ -65,6 +90,7 @@ def main(argv=None):
         ),
     )
     timer = fault.StepTimer()
+    step_ms: list[float] = []
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     out = [tok]
     for i in range(args.gen - 1):
@@ -72,14 +98,50 @@ def main(argv=None):
         logits_t, cache = step(tok, args.prompt_len + i, cache)
         tok = jnp.argmax(logits_t, axis=-1).astype(jnp.int32)
         jax.block_until_ready(tok)
-        timer.record(time.time() - t0)
+        dt = time.time() - t0
+        timer.record(dt)
+        step_ms.append(round(1e3 * dt, 3))
         out.append(tok)
+        for _, store in stores:  # async fill overlaps the next step
+            store.prefetch_last()
     gen = jnp.concatenate(out, axis=1)
-    print(json.dumps({
-        "decode_median_ms": round(1e3 * timer.median(), 2),
-        "generated_shape": list(gen.shape),
-        "sample": np.asarray(gen[0, :8]).tolist(),
-    }))
+
+    cache_stats = None
+    if stores:
+        cache_stats = {
+            "hit_rate": round(
+                float(np.mean([s.hit_rate() for _, s in stores])), 4
+            ),
+            "prefill_hit_rate": prefill_hit,
+        }
+        for k in ("hits", "misses", "uncached", "fills", "evictions"):
+            cache_stats[k] = int(sum(s.stats[k] for _, s in stores))
+
+    decode_us = 1e6 * timer.median()
+    if args.json:
+        rows = [
+            ["serve_prefill", round(1e6 * prefill_s, 3),
+             f"tokens={args.batch * args.prompt_len}"],
+            ["serve_decode_step", round(decode_us, 3),
+             f"hit={cache_stats['hit_rate']}" if cache_stats else "dense"],
+        ]
+        print(json.dumps({
+            "arch": cfg.name,
+            "rows": rows,
+            "per_step_ms": step_ms,
+            "decode_median_ms": round(1e3 * timer.median(), 2),
+            "cache": cache_stats,
+            "generated_shape": list(gen.shape),
+        }))
+    else:
+        rec = {
+            "decode_median_ms": round(1e3 * timer.median(), 2),
+            "generated_shape": list(gen.shape),
+            "sample": np.asarray(gen[0, :8]).tolist(),
+        }
+        if cache_stats:
+            rec["cache_hit_rate"] = cache_stats["hit_rate"]
+        print(json.dumps(rec))
     return gen
 
 

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import configs, data, optim
+from repro import configs, data, memstore, optim
 from repro.checkpoint import CheckpointManager
 from repro.distributed import fault, sharding
 from repro.launch import mesh as mesh_lib
@@ -120,6 +120,12 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(args.seed)
     params, model_state = transformer.init(key, cfg)
+    # tiered value tables own their sparse optimizer step (write-back SGD at
+    # the paper's memory LR); the dense Adam below never sees them
+    stores = memstore.find_stores(params)
+    for _, store in stores:
+        store.writeback_lr = args.lr * args.memory_lr_mult
+        store.warm()
     if mesh is not None:
         params = sharding.shard_params(params, mesh)
     opt_state = optim.adam_init(params)
@@ -164,13 +170,18 @@ def main(argv=None):
         monitor.heartbeat(jax.process_index(), dt)
         if step % args.log_every == 0 or step == args.steps - 1:
             slow = " STRAGGLER" if timer.is_outlier(dt) else ""
-            print(json.dumps({
+            rec = {
                 "step": step,
                 "loss": round(float(metrics["loss"]), 4),
                 "xent": round(float(metrics["xent"]), 4),
                 "grad_norm": round(float(metrics["grad_norm"]), 3),
                 "sec": round(dt, 3),
-            }) + slow)
+            }
+            if stores:
+                rec["cache_hit"] = round(
+                    float(np.mean([s.hit_rate() for _, s in stores])), 4
+                )
+            print(json.dumps(rec) + slow)
         if mgr and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
             mgr.save(step + 1,
                      {"params": params, "opt": opt_state,

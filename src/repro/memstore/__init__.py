@@ -1,0 +1,15 @@
+"""Tiered memory store: host-offloaded value tables + device hot cache.
+
+Capacity past device memory for the LRAM value table (paper: "billions of
+entries"): shard the (N, m) table into host RAM / disk, keep the hot shards
+in a device-resident cache behind an indirection table, and serve lookups
+through `interp_impl="tiered"` (see repro.core.lram).  Design narrative in
+docs/memstore.md.
+"""
+
+from repro.memstore.store import (  # noqa: F401
+    TieredSpec,
+    TieredValueStore,
+    find_stores,
+)
+from repro.memstore.interp import tiered_interp  # noqa: F401

@@ -1,0 +1,84 @@
+"""The `interp_impl="tiered"` hook: differentiable tiered lookup.
+
+Two execution modes behind one entry point, `tiered_interp(store, idx, w)`:
+
+  * **eager** (serve prefill, benchmarks, tests): concrete index arrays —
+    cache fills are real stacked host->device copies and the gather runs on
+    the device-resident cache (`TieredValueStore.gather`).
+  * **traced** (jitted train step / decode step): the index array is a
+    tracer, so the cache walk happens in `jax.experimental.io_callback`
+    bodies.  Forward gathers the touched rows through the store (ordered —
+    cache state mutates); backward emits the analytic dL/dw on device and
+    hands the sparse dL/dvalues (w ⊗ g per touched row) to the store's
+    write-back, which applies the sparse SGD step and marks shards dirty.
+
+The custom VJP mirrors `repro.kernels.ops.lram_lookup`'s backward contract:
+d values is the paper's sparse scatter-add (here: host-side into tiered
+shards), d w is the gathered-row dot.  Query gradients keep flowing through
+`w` exactly as in the dense reference path, so swapping a model between
+dense and tiered changes *where the table lives*, not its gradients.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from repro.memstore.store import TieredValueStore
+
+
+def tiered_interp(store: TieredValueStore, idx: jax.Array,
+                  w: jax.Array) -> jax.Array:
+    """sum_k w[..., k] * store[idx[..., k]] -> (..., m); differentiable."""
+    if isinstance(idx, jax.core.Tracer) or isinstance(w, jax.core.Tracer):
+        if store._traced_interp is None:
+            store._traced_interp = _build_traced_interp(store)
+        return store._traced_interp(idx, w)
+    return store.gather(idx, w)
+
+
+def _build_traced_interp(store: TieredValueStore):
+    m = store.m
+
+    def _rows_cb(idx):
+        return store.gather_rows_host(np.asarray(idx))
+
+    def _writeback_cb(idx, wg):
+        store.apply_writeback(np.asarray(idx), np.asarray(wg))
+        return np.int32(0)
+
+    def _rows(idx):
+        shape = jax.ShapeDtypeStruct(tuple(idx.shape) + (m,), jnp.float32)
+        # ordered: the callback mutates cache state (LRU, fills, stats)
+        return io_callback(_rows_cb, shape, idx, ordered=True)
+
+    @jax.custom_vjp
+    def interp(idx, w):
+        rows = _rows(idx)
+        return jnp.einsum("...k,...km->...m", w.astype(jnp.float32), rows)
+
+    def _fwd(idx, w):
+        rows = _rows(idx)
+        out = jnp.einsum("...k,...km->...m", w.astype(jnp.float32), rows)
+        return out, (idx, w, rows)
+
+    def _bwd(res, g):
+        idx, w, rows = res
+        g = g.astype(jnp.float32)
+        dw = jnp.einsum("...m,...km->...k", g, rows)
+        wg = w.astype(jnp.float32)[..., None] * g[..., None, :]
+        token = io_callback(
+            _writeback_cb, jax.ShapeDtypeStruct((), jnp.int32),
+            idx, wg, ordered=True,
+        )
+        # tie the write-back effect into the returned cotangent
+        dw = dw + jnp.zeros((), dw.dtype) * token.astype(dw.dtype)
+        return (
+            np.zeros(idx.shape, dtype=jax.dtypes.float0),
+            dw.astype(w.dtype),
+        )
+
+    interp.defvjp(_fwd, _bwd)
+    return interp

@@ -1,0 +1,449 @@
+"""Tiered value table: host-RAM (or disk) shards + a device-resident hot cache.
+
+The dense `LRAM` keeps the whole (N, m) value table in device memory, which
+caps N at HBM size long before the paper's "billions of entries".  This
+module splits the table into fixed-size *shards* of `shard_rows` consecutive
+lattice-bucket rows:
+
+    global row id  r  ->  shard  r >> log2(shard_rows)
+                          row    r &  (shard_rows - 1)
+
+  * **Host tier** — one `(num_shards, shard_rows, m)` ndarray in host RAM
+    (`backing="ram"`), or an `np.memmap`-backed ``.npy`` on disk
+    (`backing="mmap"`) for tables larger than host memory.
+  * **Device tier** — `cache_slots` shard-sized slots in device memory plus
+    an *indirection table* `shard -> slot` (-1 = not resident).  Lookups map
+    (shard, row) through the indirection table and gather from the cache
+    with a single device kernel (`repro.kernels.tiered_gather`, or jnp).
+  * **Misses** are batched per lookup: all absent shards touched by a batch
+    are copied host->device in one stacked `device_put` + scatter (JAX
+    dispatch is async, so the copy overlaps the caller's next ops).
+    `prefetch()` runs the same fill from a *predicted* index set — the serve
+    loop feeds it the previous decode step's accesses so fills overlap the
+    dense compute of the next step.
+  * **Eviction** is LRU over shards, with the current batch's shards pinned
+    so a fill can never evict a shard the same gather still needs.  If a
+    single batch touches more distinct shards than there are slots, the
+    overflow rows are served straight from the host tier (counted in
+    `stats["uncached"]`) — correctness never depends on cache capacity.
+  * **Training write-back**: gradients w.r.t. values arrive as sparse
+    (index, w*g) pairs from the custom VJP (`repro.memstore.interp`) and are
+    applied as a sparse SGD step (`writeback_lr`) directly to the cached
+    copy, marking the slot *dirty*; dirty slots are written back to their
+    host shard on eviction, `flush()`, or checkpoint save.  This mirrors how
+    production embedding tables own their sparse optimizer step instead of
+    routing the table through the dense Adam.
+
+See docs/memstore.md for the full design narrative.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import tempfile
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TieredSpec:
+    """Static configuration of a tiered table (hashable: rides LRAMConfig)."""
+
+    shard_rows: int = 2048      # rows per shard (power of two)
+    cache_slots: int = 32       # device-resident shards
+    backing: str = "ram"        # ram | mmap
+    backing_dir: str | None = None   # mmap only; default: a tempdir
+    use_pallas: bool = False    # indirected-gather kernel vs jnp reference
+
+    def __post_init__(self):
+        if self.shard_rows & (self.shard_rows - 1):
+            raise ValueError("shard_rows must be a power of two")
+        if self.cache_slots < 1:
+            raise ValueError("need at least one cache slot")
+        if self.backing not in ("ram", "mmap"):
+            raise ValueError(f"unknown backing {self.backing!r}")
+
+
+class TieredValueStore:
+    """Host-offloaded (N, m) value table with a device-resident hot cache.
+
+    Registered as a *leafless* pytree node, so it can sit at
+    ``params["values"]`` and ride through jit/grad/optimizer tree maps
+    untouched; `repro.checkpoint` detects it and streams shards to disk.
+    """
+
+    def __init__(self, num_rows: int, m: int, spec: TieredSpec,
+                 *, dtype=np.float32):
+        if num_rows % spec.shard_rows:
+            raise ValueError(
+                f"num_rows={num_rows} not divisible by "
+                f"shard_rows={spec.shard_rows}"
+            )
+        self.spec = spec
+        self.num_rows = num_rows
+        self.m = m
+        self.dtype = np.dtype(dtype)
+        self.shard_rows = spec.shard_rows
+        self.num_shards = num_rows // spec.shard_rows
+        self.cache_slots = min(spec.cache_slots, self.num_shards)
+        self._log2R = self.shard_rows.bit_length() - 1
+
+        self._host = self._alloc_host()
+        # device tier + indirection
+        self.cache_np = np.zeros(
+            (self.cache_slots, self.shard_rows, m), np.float32
+        )
+        self._cache_dev: jax.Array | None = None
+        self._shard_slot = np.full(self.num_shards, -1, np.int32)
+        self._slot_shard = np.full(self.cache_slots, -1, np.int32)
+        self._lru: collections.OrderedDict[int, int] = collections.OrderedDict()
+        self._free = list(range(self.cache_slots - 1, -1, -1))
+        self._dirty: set[int] = set()
+        self._dev_stale: set[int] = set()
+
+        # training write-back (sparse SGD; set by the trainer)
+        self.writeback_lr = 0.0
+        self.last_access: np.ndarray | None = None
+
+        self._traced_interp = None  # built lazily by repro.memstore.interp
+        self.reset_stats()
+
+    # ------------------------------------------------------------------ init
+
+    def _alloc_host(self) -> np.ndarray:
+        shape = (self.num_shards, self.shard_rows, self.m)
+        if self.spec.backing == "ram":
+            return np.zeros(shape, self.dtype)
+        d = self.spec.backing_dir or tempfile.mkdtemp(prefix="memstore_")
+        os.makedirs(d, exist_ok=True)
+        path = os.path.join(d, f"values_{self.num_rows}x{self.m}.npy")
+        return np.lib.format.open_memmap(
+            path, mode="w+", dtype=self.dtype, shape=shape
+        )
+
+    @classmethod
+    def from_dense(cls, values: np.ndarray, spec: TieredSpec,
+                   **kw) -> "TieredValueStore":
+        values = np.asarray(values)
+        n, m = values.shape
+        store = cls(n, m, spec, dtype=values.dtype, **kw)
+        store._host[...] = values.reshape(store.num_shards,
+                                          store.shard_rows, m)
+        return store
+
+    def to_dense(self) -> np.ndarray:
+        """Flush dirty slots and materialize the full table (tests only)."""
+        self.flush()
+        return np.array(self._host).reshape(self.num_rows, self.m)
+
+    def load_dense(self, values: np.ndarray) -> None:
+        """Replace table contents; invalidates the cache."""
+        values = np.asarray(values)
+        if values.shape != (self.num_rows, self.m):
+            raise ValueError(
+                f"shape {values.shape} != {(self.num_rows, self.m)}"
+            )
+        self._invalidate_cache()
+        self._host[...] = values.reshape(
+            self.num_shards, self.shard_rows, self.m
+        )
+
+    def _invalidate_cache(self) -> None:
+        self._shard_slot[:] = -1
+        self._slot_shard[:] = -1
+        self._lru.clear()
+        self._free = list(range(self.cache_slots - 1, -1, -1))
+        self._dirty.clear()
+        self._dev_stale.clear()
+        self._cache_dev = None
+
+    # ----------------------------------------------------------- addressing
+
+    def _split(self, flat_idx: np.ndarray):
+        flat_idx = flat_idx.astype(np.int64)
+        return flat_idx >> self._log2R, flat_idx & (self.shard_rows - 1)
+
+    # -------------------------------------------------- residency / mapping
+
+    def _ensure_resident(self, shards: Iterable[int]) -> None:
+        """Make `shards` cache-resident where capacity allows (LRU evict,
+        current request pinned).  Fills update the host-side cache mirror
+        and mark slots for the next batched device sync."""
+        pinned = set(int(s) for s in shards)
+        for s in sorted(pinned):
+            if self._shard_slot[s] >= 0:  # hit: touch
+                self._lru.move_to_end(s)
+                continue
+            if self._free:
+                slot = self._free.pop()
+            else:
+                victim = next(
+                    (sh for sh in self._lru if sh not in pinned), None
+                )
+                if victim is None:  # whole cache pinned by this batch
+                    continue
+                slot = self._lru.pop(victim)
+                self._writeback_slot(slot)
+                self._shard_slot[victim] = -1
+                self.stats["evictions"] += 1
+            self.cache_np[slot] = self._host[s]
+            self._shard_slot[s] = slot
+            self._slot_shard[slot] = s
+            self._lru[s] = slot
+            self._lru.move_to_end(s)
+            self._dev_stale.add(slot)
+            self.stats["fills"] += 1
+
+    def _map(self, flat_idx: np.ndarray, *, count: bool = True):
+        """(shard, row, slot, resident_mask) for flat global row ids,
+        servicing misses along the way."""
+        shard, row = self._split(flat_idx)
+        resident_before = self._shard_slot[shard] >= 0
+        self._ensure_resident(np.unique(shard))
+        slot = self._shard_slot[shard]
+        mask = slot >= 0
+        if count:
+            self.last_access = flat_idx  # feeds prefetch_last()
+            self.stats["lookups"] += 1
+            self.stats["hits"] += int(resident_before.sum())
+            self.stats["misses"] += int((~resident_before & mask).sum())
+            self.stats["uncached"] += int((~mask).sum())
+        return shard, row, slot.astype(np.int64), mask
+
+    def prefetch(self, idx, *, sync_device: bool = True) -> None:
+        """Warm the cache for a predicted index set (e.g. the previous decode
+        step's accesses) without touching hit/miss stats; the device copy is
+        dispatched asynchronously and overlaps the caller's compute.
+        `sync_device=False` fills only the host-side cache mirror — the
+        right mode when the consumer is the traced (io_callback) lookup,
+        which reads `cache_np`; the device mirror then syncs lazily on the
+        next eager gather."""
+        flat = np.asarray(idx).reshape(-1)
+        shard, _ = self._split(flat)
+        self._ensure_resident(np.unique(shard))
+        if sync_device:
+            self._sync_device()
+
+    def prefetch_last(self, *, sync_device: bool = False) -> None:
+        """Prefetch from the previous lookup's accesses — the serve loop's
+        next-step predictor (decode locality).  Refreshes those shards to
+        MRU and re-attempts fills for any that overflowed or were evicted,
+        so the fill overlaps the next step's dense compute.  Defaults to
+        host-mirror-only: the jitted decode path gathers via io_callback
+        from `cache_np`, so an eager device upload here would be traffic
+        nothing consumes."""
+        if self.last_access is not None:
+            self.prefetch(self.last_access, sync_device=sync_device)
+
+    def warm(self, shards: Iterable[int] | None = None) -> None:
+        """Fill the cache ahead of serving (default: lowest-id shards)."""
+        if shards is None:
+            shards = range(self.cache_slots)
+        self._ensure_resident(shards)
+        self._sync_device()
+
+    # ------------------------------------------------------- device mirror
+
+    def _sync_device(self) -> None:
+        if self._cache_dev is None:
+            self._cache_dev = jnp.asarray(self.cache_np)
+            self._dev_stale.clear()
+            return
+        if not self._dev_stale:
+            return
+        slots = np.fromiter(sorted(self._dev_stale), np.int32)
+        block = jnp.asarray(self.cache_np[slots])  # one stacked host->device
+        self._cache_dev = self._cache_dev.at[jnp.asarray(slots)].set(block)
+        self._dev_stale.clear()
+
+    @property
+    def cache_dev(self) -> jax.Array:
+        self._sync_device()
+        return self._cache_dev
+
+    # ------------------------------------------------------------- lookups
+
+    def gather(self, idx, w) -> jax.Array:
+        """sum_k w[..., k] * values[idx[..., k]] -> (..., m), gathering from
+        the device-resident cache (misses are filled first; rows of shards
+        that cannot fit are appended from the host tier)."""
+        idx_np = np.asarray(idx)
+        lead, top_k = idx_np.shape[:-1], idx_np.shape[-1]
+        flat = idx_np.reshape(-1)
+        shard, row, slot, mask = self._map(flat)
+        slot_rows = np.where(mask, slot * self.shard_rows + row, 0)
+        cache_flat = self.cache_dev.reshape(-1, self.m)
+        table = cache_flat
+        if not mask.all():
+            ovf = self._host[shard[~mask], row[~mask]].astype(np.float32)
+            slot_rows[~mask] = cache_flat.shape[0] + np.arange(len(ovf))
+            # pad the overflow block to a power-of-two bucket: the jitted
+            # gather then sees O(log batch) distinct table shapes, not one
+            # fresh XLA compile per distinct uncached-row count
+            pad = 1 << max(0, (len(ovf) - 1)).bit_length()
+            block = np.zeros((pad, self.m), np.float32)
+            block[:len(ovf)] = ovf
+            table = jnp.concatenate([cache_flat, jnp.asarray(block)], axis=0)
+        w_flat = jnp.asarray(w).reshape(-1, top_k).astype(jnp.float32)
+        sr = jnp.asarray(slot_rows.reshape(-1, top_k).astype(np.int32))
+        if self.spec.use_pallas and mask.all():
+            from repro.kernels import tiered_gather as tg
+            out = tg.tiered_gather_pallas(
+                cache_flat,
+                jnp.asarray(flat.reshape(-1, top_k).astype(np.int32)),
+                jnp.asarray(self._shard_slot),
+                w_flat,
+                shard_rows=self.shard_rows,
+                interpret=jax.default_backend() != "tpu",
+            )
+        else:
+            out = _gather_rows_device(table, sr, w_flat)
+        return out.reshape(*lead, self.m)
+
+    def gather_rows_host(self, idx) -> np.ndarray:
+        """values[idx] -> (idx.shape + (m,)) float32, via the same cache
+        machinery but reading the host-side cache mirror.  This is the
+        io_callback body used when the lookup runs inside jit/grad."""
+        idx_np = np.asarray(idx)
+        flat = idx_np.reshape(-1)
+        shard, row, slot, mask = self._map(flat)
+        rows = np.empty((flat.size, self.m), np.float32)
+        if mask.any():
+            rows[mask] = self.cache_np[slot[mask], row[mask]]
+        if not mask.all():
+            inv = ~mask
+            rows[inv] = self._host[shard[inv], row[inv]]
+        return rows.reshape(*idx_np.shape, self.m)
+
+    # ------------------------------------------------------------ training
+
+    def apply_writeback(self, idx, wg) -> None:
+        """Sparse SGD write-back: values[idx] -= writeback_lr * wg.
+
+        `wg` is w ⊗ dL/dout from the custom VJP (dL/dvalues restricted to
+        the touched rows).  Cached rows are updated in the cache (slot goes
+        dirty); rows of non-resident shards update the host tier directly."""
+        if self.writeback_lr <= 0.0:
+            return
+        idx_np = np.asarray(idx)
+        flat = idx_np.reshape(-1)
+        upd = -self.writeback_lr * np.asarray(wg, np.float32).reshape(
+            -1, self.m
+        )
+        shard, row = self._split(flat)
+        slot = self._shard_slot[shard].astype(np.int64)
+        mask = slot >= 0
+        if mask.any():
+            np.add.at(self.cache_np, (slot[mask], row[mask]), upd[mask])
+            touched = set(np.unique(slot[mask]).tolist())
+            self._dirty |= touched
+            self._dev_stale |= touched
+        if not mask.all():
+            inv = ~mask
+            np.add.at(
+                self._host, (shard[inv], row[inv]),
+                upd[inv].astype(self._host.dtype),
+            )
+        self.stats["writebacks"] += 1
+
+    def _writeback_slot(self, slot: int) -> None:
+        if slot in self._dirty:
+            self._host[self._slot_shard[slot]] = self.cache_np[slot].astype(
+                self.dtype
+            )
+            self._dirty.discard(slot)
+            self.stats["dirty_writebacks"] += 1
+
+    def flush(self) -> None:
+        """Write every dirty cached shard back to its host shard."""
+        for slot in sorted(self._dirty):
+            self._host[self._slot_shard[slot]] = self.cache_np[slot].astype(
+                self.dtype
+            )
+            self.stats["dirty_writebacks"] += 1
+        self._dirty.clear()
+
+    # ---------------------------------------------------------- checkpoint
+
+    def shard_host(self, i: int) -> np.ndarray:
+        """Shard `i` as seen through the cache (dirty slots win)."""
+        slot = int(self._shard_slot[i])
+        if slot >= 0 and slot in self._dirty:
+            return self.cache_np[slot].astype(self.dtype)
+        return np.asarray(self._host[i])
+
+    def load_shard(self, i: int, arr: np.ndarray) -> None:
+        if arr.shape != (self.shard_rows, self.m):
+            raise ValueError(
+                f"shard {i}: shape {arr.shape} != "
+                f"{(self.shard_rows, self.m)}"
+            )
+        self._host[i] = arr.astype(self.dtype)
+        slot = int(self._shard_slot[i])
+        if slot >= 0:  # refresh the cached copy too
+            self.cache_np[slot] = arr.astype(np.float32)
+            self._dirty.discard(slot)
+            self._dev_stale.add(slot)
+
+    # --------------------------------------------------------------- stats
+
+    def reset_stats(self) -> None:
+        self.stats = {
+            "lookups": 0, "hits": 0, "misses": 0, "uncached": 0,
+            "fills": 0, "evictions": 0, "writebacks": 0,
+            "dirty_writebacks": 0,
+        }
+
+    def hit_rate(self) -> float:
+        total = self.stats["hits"] + self.stats["misses"] \
+            + self.stats["uncached"]
+        return self.stats["hits"] / total if total else 0.0
+
+    def resident_shards(self) -> list[int]:
+        """Shards currently cached, least- to most-recently used."""
+        return list(self._lru)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"TieredValueStore(rows={self.num_rows}, m={self.m}, "
+            f"shards={self.num_shards}x{self.shard_rows}, "
+            f"slots={self.cache_slots}, backing={self.spec.backing!r}, "
+            f"hit_rate={self.hit_rate():.3f})"
+        )
+
+
+@jax.jit
+def _gather_rows_device(table, slot_rows, w):
+    """rows = table[slot_rows]; out = einsum('nk,nkm->nm', w, rows)."""
+    rows = jnp.take(table, slot_rows, axis=0)
+    return jnp.einsum("nk,nkm->nm", w, rows)
+
+
+# Leafless pytree node: tree maps (grad, optimizer, sharding, jit flattening)
+# pass the store through by aux-data identity without ever touching it.
+jax.tree_util.register_pytree_node(
+    TieredValueStore,
+    lambda s: ((), s),
+    lambda aux, children: aux,
+)
+
+
+def find_stores(tree) -> list[tuple[str, TieredValueStore]]:
+    """(path, store) for every distinct TieredValueStore in a pytree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, TieredValueStore)
+    )
+    out, seen = [], set()
+    for path, leaf in flat:
+        if isinstance(leaf, TieredValueStore) and id(leaf) not in seen:
+            seen.add(id(leaf))
+            name = "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+            )
+            out.append((name, leaf))
+    return out

@@ -1,0 +1,44 @@
+"""Optional-hypothesis shim.
+
+The property tests use hypothesis when it is installed (the `test` extra);
+without it the suite must still *collect* everywhere — CI images and the
+bare runtime container only ship pytest.  Importing `given`/`settings`/`st`
+from here gives the real decorators when available and otherwise replaces
+each @given test with a clean skip (no signature leaks into pytest's
+fixture resolution).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised on bare images
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(f):
+            def _skipped():
+                pytest.skip("hypothesis not installed (pip install .[test])")
+
+            _skipped.__name__ = f.__name__
+            _skipped.__doc__ = f.__doc__
+            _skipped.__module__ = f.__module__
+            return _skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _StrategyStub:
+        """Placeholder: strategy expressions evaluate at import time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

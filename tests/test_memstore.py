@@ -1,0 +1,290 @@
+"""Tiered memory store: LRU eviction order, dense equivalence of the
+miss->prefetch->hit paths (eager + jitted), write-back training, and
+streaming checkpoint of a table with dirty shards."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from repro import memstore
+from repro.checkpoint import CheckpointManager
+from repro.core import lram
+from repro.memstore import TieredSpec, TieredValueStore
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_store(rng, *, rows=4096, m=8, shard_rows=256, slots=4, **kw):
+    dense = rng.normal(size=(rows, m)).astype(np.float32)
+    spec = TieredSpec(shard_rows=shard_rows, cache_slots=slots, **kw)
+    return dense, TieredValueStore.from_dense(dense, spec)
+
+
+def dense_ref(dense, idx, w):
+    return np.einsum("...k,...km->...m", w, dense[idx])
+
+
+# ---------------------------------------------------------------------------
+# Eviction policy
+# ---------------------------------------------------------------------------
+
+def _check_lru_against_model(seed, lookups=40, shards=16, slots=4):
+    """Property: after any access sequence, the cache holds exactly the
+    `slots` most-recently-touched distinct shards (LRU), matching an
+    OrderedDict reference model."""
+    rng = np.random.default_rng(seed)
+    _, store = make_store(
+        rng, rows=shards * 64, shard_rows=64, slots=slots
+    )
+    import collections
+    model = collections.OrderedDict()
+    for _ in range(lookups):
+        # touch at most `slots` distinct shards so nothing overflows
+        batch_shards = np.unique(
+            rng.integers(0, shards, size=rng.integers(1, slots + 1))
+        )
+        idx = (batch_shards[:, None] * 64
+               + rng.integers(0, 64, (len(batch_shards), 8))).reshape(-1)
+        store.gather_rows_host(idx.astype(np.int32))
+        for s in sorted(batch_shards.tolist()):
+            model[s] = True
+            model.move_to_end(s)
+        while len(model) > slots:
+            model.popitem(last=False)
+        assert store.resident_shards() == list(model), (
+            f"seed={seed}: cache order diverged from LRU model"
+        )
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_lru_eviction_order_matches_model(seed):
+    _check_lru_against_model(seed)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 2**31 - 1))
+def test_lru_eviction_order_property(seed):
+    _check_lru_against_model(seed, lookups=20)
+
+
+def test_pinned_shards_never_evicted_mid_batch(rng):
+    """A batch spanning more shards than slots must stay exact: overflow
+    rows are served from the host tier, never by evicting a pinned shard."""
+    dense, store = make_store(rng, rows=4096, shard_rows=256, slots=2)
+    idx = rng.integers(0, 4096, size=(32, 16)).astype(np.int32)  # 16 shards
+    w = rng.normal(size=idx.shape).astype(np.float32)
+    out = np.asarray(store.gather(idx, w))
+    np.testing.assert_allclose(out, dense_ref(dense, idx, w), atol=1e-5)
+    assert store.stats["uncached"] > 0
+    assert len(store.resident_shards()) <= 2
+
+
+# ---------------------------------------------------------------------------
+# miss -> prefetch -> hit round trip, dense equivalence
+# ---------------------------------------------------------------------------
+
+def test_miss_prefetch_hit_round_trip(rng):
+    dense, store = make_store(rng, slots=4)
+    idx = (rng.integers(0, 4, size=(8, 32)) * 256
+           + rng.integers(0, 256, (8, 32))).astype(np.int32)  # 4 shards
+    w = rng.normal(size=idx.shape).astype(np.float32)
+
+    out_miss = np.asarray(store.gather(idx, w))  # cold: all misses
+    assert store.stats["hits"] == 0 and store.stats["misses"] > 0
+    store.reset_stats()
+
+    out_hit = np.asarray(store.gather(idx, w))   # warm: all hits
+    assert store.hit_rate() == 1.0 and store.stats["misses"] == 0
+
+    store._invalidate_cache()
+    store.prefetch(idx)                           # explicit prefetch
+    store.reset_stats()
+    out_pref = np.asarray(store.gather(idx, w))
+    assert store.hit_rate() == 1.0
+
+    expected = dense_ref(dense, idx, w)
+    for out in (out_miss, out_hit, out_pref):
+        np.testing.assert_allclose(out, expected, atol=1e-5)
+
+
+def test_lram_apply_tiered_matches_dense(rng):
+    """interp_impl='tiered' == dense reference, cache <50% of shards,
+    both eager and under jit (io_callback path)."""
+    kw = dict(log2_locations=16, m=8, heads=4, query_norm="rms")
+    dense_cfg = lram.LRAMConfig(**kw)
+    tiered_cfg = lram.LRAMConfig(
+        **kw, interp_impl="tiered",
+        tiered=TieredSpec(shard_rows=4096, cache_slots=4),  # 4/16 resident
+    )
+    pd, sd = lram.lram_init(KEY, dense_cfg)
+    pt, st_ = lram.lram_init(KEY, tiered_cfg)
+    store = pt["values"]
+    assert isinstance(store, TieredValueStore)
+    x = jax.random.normal(KEY, (3, 5, dense_cfg.in_dim))
+
+    yd, _ = lram.lram_apply(pd, sd, x, dense_cfg)
+    yt, _ = lram.lram_apply(pt, st_, x, tiered_cfg)  # eager device-cache path
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yt), atol=1e-5)
+    assert store.stats["lookups"] == 1
+
+    yj = jax.jit(lambda xx: lram.lram_apply(pt, st_, xx, tiered_cfg)[0])(x)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yj), atol=1e-5)
+
+
+def test_tiered_input_gradients_match_dense(rng):
+    kw = dict(log2_locations=16, m=8, heads=4, query_norm="rms")
+    dense_cfg = lram.LRAMConfig(**kw)
+    tiered_cfg = lram.LRAMConfig(
+        **kw, interp_impl="tiered",
+        tiered=TieredSpec(shard_rows=4096, cache_slots=4),
+    )
+    pd, sd = lram.lram_init(KEY, dense_cfg)
+    pt, st_ = lram.lram_init(KEY, tiered_cfg)
+    x = jax.random.normal(KEY, (8, dense_cfg.in_dim))
+    gd = jax.grad(
+        lambda xx: jnp.sum(lram.lram_apply(pd, sd, xx, dense_cfg)[0] ** 2)
+    )(x)
+    gt = jax.grad(
+        lambda xx: jnp.sum(lram.lram_apply(pt, st_, xx, tiered_cfg)[0] ** 2)
+    )(x)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(gt), atol=1e-5)
+
+
+def test_writeback_applies_sparse_sgd(rng):
+    dense, store = make_store(rng, slots=4)
+    store.writeback_lr = 0.1
+    idx = rng.integers(0, 1024, size=(16, 8)).astype(np.int32)
+    w = jnp.asarray(rng.normal(size=idx.shape).astype(np.float32))
+
+    def loss(w_):
+        return jnp.sum(memstore.tiered_interp(store, jnp.asarray(idx), w_) ** 2)
+
+    dw = jax.grad(loss)(w)
+    assert bool(jnp.isfinite(dw).all())
+    assert store.stats["writebacks"] == 1 and store._dirty
+    after = store.to_dense()
+    touched = np.zeros(4096, bool)
+    touched[idx.reshape(-1)] = True
+    assert not np.allclose(after[touched], dense[touched])
+    np.testing.assert_array_equal(after[~touched], dense[~touched])
+
+
+def test_pallas_indirected_gather_matches(rng):
+    dense, store = make_store(
+        rng, rows=1024, shard_rows=128, slots=8, use_pallas=True
+    )
+    idx = rng.integers(0, 1024, size=(8, 16)).astype(np.int32)
+    w = rng.normal(size=idx.shape).astype(np.float32)
+    out = np.asarray(store.gather(idx, w))
+    np.testing.assert_allclose(out, dense_ref(dense, idx, w), atol=1e-5)
+
+
+def test_mmap_backing_round_trip(rng, tmp_path):
+    dense = rng.normal(size=(1024, 8)).astype(np.float32)
+    spec = TieredSpec(shard_rows=128, cache_slots=2, backing="mmap",
+                      backing_dir=str(tmp_path))
+    store = TieredValueStore.from_dense(dense, spec)
+    idx = rng.integers(0, 1024, size=(4, 8)).astype(np.int32)
+    w = rng.normal(size=idx.shape).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(store.gather(idx, w)), dense_ref(dense, idx, w), atol=1e-5
+    )
+    assert list(tmp_path.glob("*.npy"))
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_streams_dirty_tiered_table(rng, tmp_path):
+    dense, store = make_store(rng, rows=2048, shard_rows=256, slots=3)
+    store.writeback_lr = 0.5
+    idx = rng.integers(0, 2048, size=(64,)).astype(np.int32)
+    store.gather_rows_host(idx)
+    store.apply_writeback(idx, rng.normal(size=(64, 8)).astype(np.float32))
+    assert store._dirty, "test needs dirty cached shards"
+
+    tree = {"params": {"values": store, "w": jnp.ones((3,))},
+            "opt": {"mu": {"values": store}}}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, tree)
+    expected = store.to_dense()
+
+    # the shared store must be written once (tiered) + referenced (ref)
+    import json, os
+    man = json.load(open(os.path.join(
+        str(tmp_path), "step_000000000005", "manifest.json")))
+    kinds = sorted(v.get("kind", "array") for v in man["leaves"].values())
+    assert kinds == ["array", "tiered", "tiered_ref"]
+
+    fresh = TieredValueStore(2048, 8, TieredSpec(shard_rows=256,
+                                                 cache_slots=3))
+    tree2 = {"params": {"values": fresh, "w": jnp.zeros((3,))},
+             "opt": {"mu": {"values": fresh}}}
+    step, restored = mgr.restore(tree2)
+    assert step == 5
+    np.testing.assert_array_equal(fresh.to_dense(), expected)
+    assert restored["params"]["values"] is fresh
+
+    # tiered checkpoint restored into a dense proto materializes host-side
+    tree3 = {"params": {"values": jnp.zeros((2048, 8)), "w": jnp.zeros((3,))},
+             "opt": {"mu": {"values": jnp.zeros((2048, 8))}}}
+    _, r3 = mgr.restore(tree3)
+    np.testing.assert_allclose(np.asarray(r3["params"]["values"]), expected)
+
+
+def test_corrupt_shard_falls_back_to_older_checkpoint(rng, tmp_path):
+    dense, store = make_store(rng, rows=1024, shard_rows=128, slots=2)
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    tree = {"values": store}
+    mgr.save(1, tree)
+    expected = store.to_dense()
+    store.writeback_lr = 0.5
+    idx = rng.integers(0, 1024, size=(32,)).astype(np.int32)
+    store.gather_rows_host(idx)
+    store.apply_writeback(idx, rng.normal(size=(32, 8)).astype(np.float32))
+    mgr.save(2, tree)
+
+    import os
+    bad = os.path.join(str(tmp_path), "step_000000000002",
+                       "values.npy.shards", "shard_000003.npy")
+    with open(bad, "wb") as f:
+        f.write(b"garbage")
+
+    fresh = TieredValueStore(1024, 8, TieredSpec(shard_rows=128,
+                                                 cache_slots=2))
+    step, _ = mgr.restore({"values": fresh})
+    assert step == 1  # newest shard set corrupt -> older checkpoint wins
+    np.testing.assert_array_equal(fresh.to_dense(), expected)
+
+    # every candidate corrupt AND the store already partially overwritten:
+    # restore must raise, not silently hand back a half-loaded table
+    bad1 = os.path.join(str(tmp_path), "step_000000000001",
+                        "values.npy.shards", "shard_000003.npy")
+    with open(bad1, "wb") as f:
+        f.write(b"garbage")
+    fresh2 = TieredValueStore(1024, 8, TieredSpec(shard_rows=128,
+                                                  cache_slots=2))
+    with pytest.raises(IOError):
+        mgr.restore({"values": fresh2})
+
+
+def test_store_is_invisible_to_tree_maps(rng):
+    _, store = make_store(rng)
+    tree = {"a": jnp.ones((2,)), "values": store}
+    mapped = jax.tree.map(lambda x: x * 2, tree)
+    assert mapped["values"] is store
+    assert len(jax.tree.leaves(tree)) == 1
+    assert memstore.find_stores(tree) == [("values", store)]
+
+
+def test_smoke_config_table_exceeds_cache_budget():
+    """The acceptance regime: N strictly larger than the device budget."""
+    from repro import configs
+    cfg = configs.get_smoke_config("lram-tiered")
+    spec = cfg.lram.tiered
+    table_rows = cfg.lram.num_locations
+    cached_rows = spec.cache_slots * spec.shard_rows
+    assert cached_rows < table_rows // 2
