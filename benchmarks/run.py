@@ -13,7 +13,8 @@ import time
 import traceback
 
 MODULES = ("table1_lattice", "table2_lm", "table3_opcounts",
-           "table4_timing", "table5_utilisation", "table6_tiering")
+           "table4_timing", "table5_utilisation", "table6_tiering",
+           "table7_quant")
 
 
 def main() -> None:

@@ -1,0 +1,162 @@
+"""Table 7 (beyond-paper): quantized value tables — bytes/entry, accuracy,
+and per-lookup latency vs the fp32 tiered path.
+
+Runs the same drifting-hot-set access stream as table6 over (a) the dense
+fp32 reference gather, (b) the fp32 tiered store, and (c) the quantized
+tiered stores (int8 / fp8), reporting for each: per-lookup latency,
+effective bytes per table entry (payload + per-row scales), host->device
+fill traffic, and the max abs output delta vs the fp32 reference — which
+must sit inside the documented `repro.quant.max_abs_error_bound`.
+
+    PYTHONPATH=src python -m benchmarks.run table7        # harness row form
+    PYTHONPATH=src python -m benchmarks.table7_quant --smoke
+
+The `--smoke` form is the acceptance check: it additionally prints a
+summary asserting >=3.5x bytes/entry reduction and int8-tiered latency no
+worse than fp32-tiered.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import quant
+from repro.core import lram
+from repro.memstore import TieredSpec, TieredValueStore
+
+M = 64
+TOP_K = 32
+
+
+def _params(smoke: bool):
+    if smoke:
+        return dict(num_rows=2**14, shard_rows=512, batch=128,
+                    steps=8, warmup=2)
+    return dict(num_rows=2**16, shard_rows=2048, batch=256,
+                steps=12, warmup=3)
+
+
+def _stream(rng, steps, num_rows, batch):
+    """table6's decode-like pattern: a drifting hot window (cache-friendly)
+    so fills — the traffic quantization shrinks — stay on the clock."""
+    hot_span = num_rows // 8
+    center = 0
+    for _ in range(steps):
+        center = (center + rng.integers(0, num_rows // 16)) % num_rows
+        yield ((center + rng.integers(0, hot_span, (batch, TOP_K)))
+               % num_rows).astype(np.int32)
+
+
+def _time_stream(gather, rng, p):
+    times = []
+    for t, idx in enumerate(_stream(rng, p["steps"], p["num_rows"],
+                                    p["batch"])):
+        w = (rng.normal(size=idx.shape).astype(np.float32) / TOP_K)
+        t0 = time.perf_counter()
+        out = gather(idx, w)
+        jax.block_until_ready(out)
+        if t >= p["warmup"]:
+            times.append(time.perf_counter() - t0)
+    return 1e6 * float(np.median(times))  # median: robust to CPU jitter
+
+
+def _accuracy(dense, store_or_table, rng, p, kind):
+    """Max abs delta vs the fp32 gather on a fresh index set, with the
+    documented bound it must respect."""
+    idx = rng.integers(0, p["num_rows"], size=(64, TOP_K)).astype(np.int32)
+    w = rng.normal(size=idx.shape).astype(np.float32) / TOP_K
+    want = np.einsum("...k,...km->...m", w, dense[idx])
+    if isinstance(store_or_table, TieredValueStore):
+        got = np.asarray(store_or_table.gather(idx, w))
+        scale = np.concatenate(
+            [store_or_table.shard_scale_host(i)
+             for i in range(store_or_table.num_shards)]
+        )
+    else:
+        got = np.asarray(quant.gather_interp_quant(
+            store_or_table, jnp.asarray(idx), jnp.asarray(w)))
+        scale = np.asarray(store_or_table.scale)
+    err = float(np.abs(got - want).max())
+    bound = quant.max_abs_error_bound(scale, w, kind)
+    return err, bound
+
+
+def measure(smoke: bool = False):
+    p = _params(smoke)
+    rng = np.random.default_rng(0)
+    dense = rng.normal(size=(p["num_rows"], M)).astype(np.float32) * 0.02
+    num_shards = p["num_rows"] // p["shard_rows"]
+    slots = max(2, num_shards // 4)  # 25% resident: fills dominate
+    rows, summary = [], {}
+
+    dense_dev = jnp.asarray(dense)
+    ref = jax.jit(lram.gather_interp)
+    us = _time_stream(
+        lambda i, w: ref(dense_dev, jnp.asarray(i), jnp.asarray(w)),
+        np.random.default_rng(1), p,
+    )
+    rows.append(("quant_dense_fp32", us, f"bytes_per_entry={4 * M}"))
+
+    for kind in ("none", "int8", "fp8"):
+        store = TieredValueStore.from_dense(
+            dense, TieredSpec(shard_rows=p["shard_rows"], cache_slots=slots,
+                              quant=kind)
+        )
+        store.warm()
+        store.reset_stats()
+        us = _time_stream(store.gather, np.random.default_rng(1), p)
+        bpe = store.bytes_per_entry()
+        derived = (
+            f"bytes_per_entry={bpe} hit={store.hit_rate():.3f} "
+            f"fill_mb={store.stats['fill_bytes'] / 2**20:.2f}"
+        )
+        if kind != "none":
+            err, bound = _accuracy(dense, store, np.random.default_rng(2),
+                                   p, kind)
+            derived += f" max_err={err:.2e} bound={bound:.2e}"
+            assert err <= bound + 1e-6, (kind, err, bound)
+        rows.append((f"quant_tiered_{kind if kind != 'none' else 'fp32'}",
+                     us, derived))
+        summary[kind] = {"us": us, "bytes_per_entry": bpe,
+                         "fill_bytes": store.stats["fill_bytes"]}
+    return rows, summary
+
+
+def run():
+    return measure(smoke=False)[0]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + acceptance summary")
+    args = ap.parse_args(argv)
+    rows, summary = measure(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    fp32, q8 = summary["none"], summary["int8"]
+    reduction = fp32["bytes_per_entry"] / q8["bytes_per_entry"]
+    fill_reduction = (fp32["fill_bytes"] / q8["fill_bytes"]
+                      if q8["fill_bytes"] else float("inf"))
+    print(f"# bytes/entry: {fp32['bytes_per_entry']} -> "
+          f"{q8['bytes_per_entry']} ({reduction:.2f}x reduction)")
+    print(f"# fill traffic: {fill_reduction:.2f}x reduction")
+    print(f"# latency: fp32-tiered {fp32['us']:.1f}us vs "
+          f"int8-tiered {q8['us']:.1f}us")
+    assert reduction >= 3.5, f"bytes/entry reduction {reduction:.2f}x < 3.5x"
+    # latency acceptance with a noise margin: the quantized path must not
+    # be meaningfully slower than the fp32 tiered path it replaces
+    assert q8["us"] <= 1.10 * fp32["us"], (
+        f"int8 tiered {q8['us']:.1f}us > fp32 tiered {fp32['us']:.1f}us"
+    )
+    print("# OK: >=3.5x bytes/entry, int8 latency <= fp32 tiered")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,9 @@
 
 Times the LRAM layer forward at N = 2^16 .. 2^20 and PKM at matched sizes:
 LRAM stays flat (O(1)); PKM grows ~ sqrt(N).  ASCII plot, CPU wall-clock.
+The sweep also times the int8-quantized layer and closes with the capacity
+table: effective bytes/entry and the largest N affordable at a fixed
+memory budget, fp32 vs int8 (see docs/architecture.md, `repro.quant`).
 """
 
 import time
@@ -12,6 +15,7 @@ import jax
 import numpy as np
 
 from repro.core import lram, pkm
+from repro import quant
 
 BATCH = 256
 KEY = jax.random.PRNGKey(0)
@@ -28,7 +32,7 @@ def timed(f, *args, iters=5):
 
 
 def main():
-    print(f"{'N':>10} {'LRAM ms':>9} {'PKM ms':>9}")
+    print(f"{'N':>10} {'LRAM ms':>9} {'LRAM-q8 ms':>11} {'PKM ms':>9}")
     results = []
     for log2 in (16, 17, 18, 19, 20):
         cfg = lram.LRAMConfig(log2_locations=log2, m=64, heads=8,
@@ -39,6 +43,13 @@ def main():
                     lram.lram_apply(p, s, x, c)[0])
         t_lram = timed(f, params, x)
 
+        qcfg = lram.LRAMConfig(log2_locations=log2, m=64, heads=8,
+                               query_norm="rms", table_quant="int8")
+        qparams, qstate = lram.lram_init(KEY, qcfg)
+        fq = jax.jit(lambda p, x, c=qcfg, s=qstate:
+                     lram.lram_apply(p, s, x, c)[0])
+        t_lram_q8 = timed(fq, qparams, x)
+
         n_keys = int(2 ** (log2 / 2))
         pcfg = pkm.PKMConfig(n_keys=n_keys, heads=8, key_dim=64,
                              value_dim=512, top_k=32, query_norm="none")
@@ -48,7 +59,7 @@ def main():
                      pkm.pkm_apply(p, s, x, c)[0])
         t_pkm = timed(fp, pparams, xp)
         results.append((log2, t_lram, t_pkm))
-        print(f"{2**log2:>10} {t_lram:>9.2f} {t_pkm:>9.2f}")
+        print(f"{2**log2:>10} {t_lram:>9.2f} {t_lram_q8:>11.2f} {t_pkm:>9.2f}")
 
     tmax = max(max(r[1], r[2]) for r in results)
     print("\n  LRAM (#)  vs PKM (*)   — flat vs sqrt(N)")
@@ -57,6 +68,22 @@ def main():
         bars_p = int(40 * tp / tmax)
         print(f"2^{log2} |{'#' * bars_l}")
         print(f"     |{'*' * bars_p}")
+
+    # capacity at fixed budget: the other axis of the headline claim.
+    # bytes/entry fixes the largest N a memory budget can hold, and int8
+    # payloads + per-row fp32 scales cut it ~3.8x (repro.quant).
+    m = 64
+    print(f"\n{'budget':>8} {'fp32 B/entry':>13} {'int8 B/entry':>13} "
+          f"{'max N fp32':>12} {'max N int8':>12}")
+    for gib in (1, 16, 256):
+        budget = gib * 2**30
+        bpe_fp = quant.bytes_per_entry(m, None)
+        bpe_q8 = quant.bytes_per_entry(m, "int8")
+        print(f"{gib:>6}GiB {bpe_fp:>13} {bpe_q8:>13} "
+              f"{float(budget // bpe_fp):>12.2e} "
+              f"{float(budget // bpe_q8):>12.2e}")
+    print(f"\nint8 capacity multiplier at fixed budget: "
+          f"{quant.bytes_per_entry(m, None) / quant.bytes_per_entry(m, 'int8'):.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,20 @@
+"""lram-repro: the E8-lattice differentiable memory layer (JAX/Pallas).
+
+Package layout (full walkthrough in docs/architecture.md):
+
+  * `repro.core`        — the paper's layer: lattice, torus, indexing, LRAM
+  * `repro.quant`       — int8/fp8 value-table storage codec
+  * `repro.kernels`     — Pallas TPU kernels + jnp references
+  * `repro.memstore`    — tiered host/device value store
+  * `repro.distributed` — sharded lookup, pipeline, collectives, fault
+  * `repro.nn`          — minimal functional NN substrate
+  * `repro.optim`       — Adam (10x memory LR) + gradient compression
+  * `repro.models`      — transformer/mamba/moe blocks hosting the layer
+  * `repro.data`        — synthetic objectives (incl. fact recall)
+  * `repro.configs`     — architecture registry
+  * `repro.checkpoint`  — atomic, checksummed, shard-streaming
+  * `repro.analysis`    — HLO collective parsing, roofline estimates
+  * `repro.launch`      — train / serve / dryrun drivers
+
+Subpackages import lazily from here on down — `import repro` pulls no jax.
+"""

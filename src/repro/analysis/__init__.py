@@ -1,0 +1,9 @@
+"""Static performance analysis (no accelerator required).
+
+Public surface:
+
+  * `repro.analysis.hlo`      — parse compiled HLO for collectives
+    (`parse_collectives`: op counts + wire bytes per mesh axis)
+  * `repro.analysis.roofline` — arithmetic-intensity / bandwidth roofline
+    estimates for the lookup and dense paths
+"""

@@ -1,1 +1,10 @@
+"""Fault-tolerant checkpointing.
+
+Public surface: `CheckpointManager` — atomic (tmp-dir + rename),
+checksummed (per-leaf / per-shard crc32), async for dense trees,
+shard-streaming for tiered value stores (quantized payload + scales when
+`TieredSpec.quant` is set), with newest-valid-first restore and elastic
+re-sharding.
+"""
+
 from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -27,6 +27,12 @@ Guarantees:
     Adam moments share the node) is written once and cross-referenced.
     Saves containing tiered stores are forced blocking: the store keeps
     training-mutable state, so the async snapshot trick does not apply.
+  * quantized   — a quantized store (`TieredSpec.quant` of int8/fp8)
+    checkpoints its 1-byte payload plus `scale_NNNNNN.npy` per-row fp32
+    scales, each independently checksummed.  Restore converts freely:
+    quantized shards stream into a dense store (dequantized) or a dense
+    checkpoint into a quantized store (requantized, nearest) — see
+    `TieredValueStore.load_shard`.
 """
 
 from __future__ import annotations
@@ -40,6 +46,7 @@ import zlib
 import jax
 import numpy as np
 
+from repro import quant
 from repro.memstore import TieredValueStore
 
 _MANIFEST = "manifest.json"
@@ -78,12 +85,26 @@ class _TieredLeaf:
     def shard_path(self, i: int) -> str:
         return os.path.join(self.dir, self.meta["dir"], f"shard_{i:06d}.npy")
 
+    def scale_path(self, i: int) -> str:
+        return os.path.join(self.dir, self.meta["dir"], f"scale_{i:06d}.npy")
+
+    @property
+    def quant(self) -> str:
+        return self.meta.get("quant", "none")
+
     def _read_shard(self, i: int) -> np.ndarray:
         """Load + checksum one shard — verify-while-loading, single read."""
         arr = np.load(self.shard_path(i))
         if zlib.crc32(np.ascontiguousarray(arr).tobytes()) \
                 != self.meta["crc32"][i]:
             raise IOError(f"checksum mismatch for shard {i}")
+        return arr
+
+    def _read_scale(self, i: int) -> np.ndarray:
+        arr = np.load(self.scale_path(i))
+        if zlib.crc32(np.ascontiguousarray(arr).tobytes()) \
+                != self.meta["scale_crc32"][i]:
+            raise IOError(f"checksum mismatch for shard {i} scales")
         return arr
 
     def load_into(self, store: TieredValueStore,
@@ -98,22 +119,31 @@ class _TieredLeaf:
                 f"store is {store.num_shards}x{store.shard_rows}x{store.m}"
             )
         for i in range(meta["num_shards"]):
-            arr = self._read_shard(i)  # may raise: mark mutation first
+            # may raise: mark mutation first.  load_shard converts between
+            # quantized and dense payloads as needed, so any (checkpoint
+            # quant) x (store quant) pairing restores shard by shard.
+            arr = self._read_shard(i)
+            scale = self._read_scale(i) if self.quant != "none" else None
             if mutated is not None and store not in mutated:
                 mutated.append(store)
-            store.load_shard(i, arr)
+            store.load_shard(i, arr, scale)
         return store
 
     def materialize(self) -> np.ndarray:
-        """Concatenate shards into a dense host table (restore-into-dense)."""
+        """Concatenate shards into a dense host table (restore-into-dense);
+        quantized checkpoints are dequantized to fp32 on the way out."""
         meta = self.meta
+        quantized = self.quant != "none"
         out = np.empty(
             (meta["num_shards"] * meta["shard_rows"], meta["m"]),
-            np.dtype(meta["dtype"]),
+            np.float32 if quantized else np.dtype(meta["dtype"]),
         )
         r = meta["shard_rows"]
         for i in range(meta["num_shards"]):
-            out[i * r:(i + 1) * r] = self._read_shard(i)
+            arr = self._read_shard(i)
+            if quantized:
+                arr = quant.dequantize_rows_np(arr, self._read_scale(i))
+            out[i * r:(i + 1) * r] = arr
         return out
 
 
@@ -174,11 +204,18 @@ class CheckpointManager:
             store.flush()
             sub = _mangle(name) + ".shards"
             os.makedirs(os.path.join(tmp, sub))
-            crcs = []
+            quantized = store.quant != "none"
+            crcs, scale_crcs = [], []
             for i in range(store.num_shards):  # streamed, one shard at a time
                 arr = store.shard_host(i)
                 np.save(os.path.join(tmp, sub, f"shard_{i:06d}.npy"), arr)
                 crcs.append(zlib.crc32(np.ascontiguousarray(arr).tobytes()))
+                if quantized:  # per-row fp32 scales ride beside the payload
+                    s = store.shard_scale_host(i)
+                    np.save(os.path.join(tmp, sub, f"scale_{i:06d}.npy"), s)
+                    scale_crcs.append(
+                        zlib.crc32(np.ascontiguousarray(s).tobytes())
+                    )
             manifest["leaves"][name] = {
                 "kind": "tiered",
                 "dir": sub,
@@ -188,6 +225,9 @@ class CheckpointManager:
                 "dtype": str(store.dtype),
                 "crc32": crcs,
             }
+            if quantized:
+                manifest["leaves"][name]["quant"] = store.quant
+                manifest["leaves"][name]["scale_crc32"] = scale_crcs
         with open(os.path.join(tmp, _MANIFEST), "w") as f:
             json.dump(manifest, f)
             f.flush()

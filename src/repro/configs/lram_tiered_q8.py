@@ -1,0 +1,34 @@
+"""`lram-tiered-q8`: the tiered-memory LRAM with an int8 value table.
+
+Same model and tiering layout as `lram-tiered`, with the host shards, the
+device hot cache, and the host->device fill traffic all carrying 1-byte
+rows plus per-row fp32 scales (`LRAMConfig.table_quant="int8"` /
+`TieredSpec.quant`).  At the paper's m=64 that is 68 B/entry vs 256 —
+a ~3.8x capacity multiplier at fixed memory budget, and the same factor
+off every PCIe fill (benchmarks/table7_quant.py measures both).  Training
+still works: the sparse write-back requantizes dirty rows with stochastic
+rounding (see docs/memstore.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import lram_tiered
+
+
+def _quantize(cfg):
+    spec = dataclasses.replace(cfg.lram.tiered, quant="int8")
+    return dataclasses.replace(
+        cfg,
+        name="lram-tiered-q8",
+        lram=dataclasses.replace(cfg.lram, table_quant="int8", tiered=spec),
+    )
+
+
+def config():
+    return _quantize(lram_tiered.config())
+
+
+def smoke_config():
+    return _quantize(lram_tiered.smoke_config())

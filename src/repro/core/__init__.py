@@ -1,3 +1,17 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's layer: E8 lattice memory with O(1) random-access lookup.
+
+Public surface (one module per concern):
+
+  * `repro.core.lattice`  — 232-candidate E8 neighbor enumeration and the
+    interpolation kernel f(r) = max(0, 1 - r^2/8)^4
+  * `repro.core.torus`    — torus_map: queries onto the fundamental domain
+  * `repro.core.indexing` — lattice point <-> flat table index bijection
+    (`TorusSpec`, `choose_torus`, `encode_points`, `decode_index`)
+  * `repro.core.lram`     — `LRAMConfig`, `lram_init`/`lram_apply`, the
+    memory-augmented FFN block, and the `interp_impl` dispatch across the
+    four lookup implementations (reference | pallas | tiered | sharded)
+    plus quantized tables (`table_quant`)
+  * `repro.core.pkm`      — Product-Key Memory baseline
+
+Data flow and backward-pass contracts: docs/architecture.md.
+"""

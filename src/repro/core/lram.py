@@ -24,6 +24,13 @@ a callable (legacy hook) or a string naming a built-in implementation; the
 string can also be baked into the config (`LRAMConfig.interp_impl`), which
 is how `lram_init` knows to build the value table as a `TieredValueStore`
 instead of a dense device array.
+
+Orthogonally, `LRAMConfig.table_quant` ("none" | "int8" | "fp8") stores the
+value table quantized with per-row fp32 scales (repro.quant): rows move in
+their 1-byte form through every lookup implementation and are dequantized
+at gather time, with the weighted sum still in fp32.  All four impls agree
+with the fp32 reference within `repro.quant.max_abs_error_bound`; the map
+of where the dequant sits in each path is docs/architecture.md.
 """
 
 from __future__ import annotations
@@ -50,6 +57,13 @@ class LRAMConfig:
     table_dtype: str = "float32"
     interp_impl: str = "reference"  # reference | pallas | tiered
     tiered: Any = None              # memstore.TieredSpec when interp_impl=tiered
+    table_quant: str = "none"       # none | int8 | fp8 (per-row fp32 scales)
+
+    def __post_init__(self):
+        if self.table_quant not in ("none", "int8", "fp8"):
+            raise ValueError(
+                f"table_quant must be none|int8|fp8, got {self.table_quant!r}"
+            )
 
     @property
     def torus_spec(self) -> indexing.TorusSpec:
@@ -70,6 +84,15 @@ class LRAMConfig:
     @property
     def num_params(self) -> int:
         return self.num_locations * self.m
+
+    @property
+    def table_bytes_per_entry(self) -> int:
+        """Storage bytes per table row (payload + per-row scale if quantized)."""
+        from repro import quant
+
+        if self.table_quant == "none":
+            return self.m * jnp.dtype(self.table_dtype).itemsize
+        return quant.bytes_per_entry(self.m, self.table_quant)
 
 
 # ---------------------------------------------------------------------------
@@ -133,7 +156,7 @@ def _run_interp(values, idx, w, cfg: "LRAMConfig", override) -> jax.Array:
     gather cannot read a host-offloaded table.
     """
     impl = override if override is not None else cfg.interp_impl
-    from repro import memstore  # deferred: keeps core importable standalone
+    from repro import memstore, quant  # deferred: keeps core importable
 
     if isinstance(values, memstore.TieredValueStore):
         if callable(impl):
@@ -143,6 +166,25 @@ def _run_interp(values, idx, w, cfg: "LRAMConfig", override) -> jax.Array:
                 "override to use the tiered lookup"
             )
         return memstore.tiered_interp(values, idx, w)
+    if isinstance(values, quant.QuantizedTable):
+        # quantized dense table: rows move in their 1-byte form and are
+        # dequantized at gather time; the weighted sum stays fp32
+        if callable(impl):
+            # hooks that understand QuantizedTable (the sharded lookup)
+            # receive it as-is; legacy dense hooks would misread it
+            return impl(values, idx, w)
+        if impl in ("reference", "dense"):
+            return quant.gather_interp_quant(values, idx, w)
+        if impl == "pallas":
+            from repro.kernels import gather_interp as gi
+
+            return gi.gather_interp_quant(
+                values.q, values.scale, idx, w,
+                jax.default_backend() != "tpu",
+            )
+        raise ValueError(
+            f"interp_impl {impl!r} cannot read a QuantizedTable"
+        )
     if callable(impl):
         return impl(values, idx, w)
     if impl == "tiered":
@@ -174,12 +216,28 @@ def lram_init(key, cfg: LRAMConfig, *, dtype=jnp.float32):
     if cfg.interp_impl == "tiered":
         # same RNG draw as the dense path, re-homed to host shards: a tiered
         # layer is numerically identical to its dense twin at init
+        import dataclasses as _dc
+
         import numpy as np
 
         from repro import memstore
 
         spec = cfg.tiered or memstore.TieredSpec()
+        if cfg.table_quant != "none" and spec.quant != cfg.table_quant:
+            if spec.quant != "none":
+                raise ValueError(
+                    f"LRAMConfig.table_quant={cfg.table_quant!r} conflicts "
+                    f"with TieredSpec.quant={spec.quant!r}"
+                )
+            spec = _dc.replace(spec, quant=cfg.table_quant)
         values = memstore.TieredValueStore.from_dense(np.asarray(values), spec)
+    elif cfg.table_quant != "none":
+        # quantize the identical RNG draw: a quantized layer differs from
+        # its fp32 twin only by per-row rounding (bound: repro.quant.
+        # max_abs_error_bound), across every interp_impl
+        from repro import quant
+
+        values = quant.QuantizedTable.from_dense(values, cfg.table_quant)
     params: dict[str, Any] = {"values": values}
     state: dict[str, Any] = {}
     if cfg.query_norm == "batch":

@@ -1,3 +1,11 @@
+"""Stateless synthetic data (batch derived from (config, step) — no
+loader state to checkpoint).
+
+Public surface: `DataConfig`, `get_batch` (mlm/clm objectives), and
+`make_fact_table` / `repro.data.synthetic.fact_eval_batch` for the
+fact-recall probe the memory layer is evaluated on.
+"""
+
 from repro.data.synthetic import (  # noqa: F401
     DataConfig,
     get_batch,

@@ -1,0 +1,26 @@
+"""shard_map across jax versions.
+
+jax >= 0.6 exports `jax.shard_map` with a `check_vma` keyword; earlier
+releases (this container ships 0.4.x) keep it in `jax.experimental` with
+the equivalent knob spelled `check_rep`.  `shard_map(...)` here accepts
+the modern signature and rewrites the keyword when running on old jax.
+"""
+
+from __future__ import annotations
+
+try:
+    from jax import shard_map as _shard_map
+
+    _LEGACY = False
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _LEGACY = True
+
+
+def shard_map(f, /, *, check_vma: bool = True, **kw):
+    if _LEGACY:
+        kw["check_rep"] = check_vma
+    else:
+        kw["check_vma"] = check_vma
+    return _shard_map(f, **kw)

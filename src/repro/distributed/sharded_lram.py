@@ -19,12 +19,12 @@ model axis at all.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.distributed._compat import shard_map
+from repro.quant import QuantizedTable, dequantize_rows
 
 
 def sharded_gather_interp(mesh: Mesh, *, axis: str = "model"):
@@ -32,26 +32,54 @@ def sharded_gather_interp(mesh: Mesh, *, axis: str = "model"):
 
     values must be laid out P(axis, None); idx/w replicated along `axis`
     (they are functions of activations, which are batch-sharded on `data`).
+    `values` may also be a `repro.quant.QuantizedTable`: its payload and
+    per-row scales shard over the same axis, each device dequantizes only
+    the rows it gathers locally, and the psum'd partials are unchanged —
+    quantization is invisible to the collective.
     """
     n_shards = mesh.shape[axis]
     other = tuple(a for a in mesh.axis_names if a != axis)
     act_spec = P(other if len(other) > 1 else (other[0] if other else None))
 
     def interp(values, idx, w):
-        rows_local = values.shape[0] // n_shards
+        quantized = isinstance(values, QuantizedTable)
+        table = values.q if quantized else values
+        rows_local = table.shape[0] // n_shards
 
-        def local(values_l, idx_l, w_l):
+        def local_rows(values_l, idx_l):
             base = jax.lax.axis_index(axis) * rows_local
             rel = idx_l - base
             ok = (rel >= 0) & (rel < rows_local)
             rel_safe = jnp.clip(rel, 0, rows_local - 1)
+            return rel_safe, ok
+
+        def local(values_l, idx_l, w_l):
+            rel_safe, ok = local_rows(values_l, idx_l)
             rows = jnp.take(values_l, rel_safe, axis=0).astype(w_l.dtype)
+            wm = w_l * ok.astype(w_l.dtype)
+            out = jnp.einsum("...k,...km->...m", wm, rows)
+            return jax.lax.psum(out, axis)
+
+        def local_quant(values_l, scale_l, idx_l, w_l):
+            rel_safe, ok = local_rows(values_l, idx_l)
+            rows = dequantize_rows(  # in-shard dequant, fp32 partials
+                jnp.take(values_l, rel_safe, axis=0),
+                jnp.take(scale_l, rel_safe, axis=0),
+            ).astype(w_l.dtype)
             wm = w_l * ok.astype(w_l.dtype)
             out = jnp.einsum("...k,...km->...m", wm, rows)
             return jax.lax.psum(out, axis)
 
         dim_spec = act_spec[0] if len(act_spec) else None
         io_spec = P(*((dim_spec,) + (None,) * (idx.ndim - 1)))
+        if quantized:
+            return shard_map(
+                local_quant,
+                mesh=mesh,
+                in_specs=(P(axis, None), P(axis), io_spec, io_spec),
+                out_specs=io_spec,
+                check_vma=False,
+            )(values.q, values.scale, idx, w)
         return shard_map(
             local,
             mesh=mesh,

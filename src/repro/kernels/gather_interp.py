@@ -17,8 +17,11 @@ size (not N) fixes the cost per lookup.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -72,3 +75,105 @@ def gather_interp_pallas(
         interpret=interpret,
     )(idx_flat, w_flat, values)
     return out.reshape(*lead, m)
+
+
+# ---------------------------------------------------------------------------
+# fused dequant variant: rows move HBM->VMEM in their 1-byte form
+# ---------------------------------------------------------------------------
+
+def _kernel_quant(idx_ref, w_ref, row_ref, scale_ref, out_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # dequantize in VMEM: the DMA'd row is int8/fp8; its per-row fp32 scale
+    # rides a (1, 1) block through the same index_map.  The multiply-
+    # accumulate stays fp32, so only the memory traffic changes.
+    weight = w_ref[0, k] * scale_ref[0, 0]
+    out_ref[...] += weight * row_ref[...].astype(out_ref.dtype)
+
+
+def gather_interp_quant_pallas(
+    q: jax.Array,
+    scale: jax.Array,
+    idx: jax.Array,
+    w: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """sum_k w[..., k] * scale[i] * q[i := idx[..., k]] -> (..., m).
+
+    Same scalar-prefetch gather as `gather_interp_pallas`, but the value
+    table operand is the quantized payload (int8 or float8_e4m3fn) and each
+    grid step additionally DMAs the row's fp32 scale; dequantization is a
+    scalar multiply fused into the VMEM accumulation.  Per-step traffic
+    drops from 4*m bytes to m + 4.
+    """
+    lead = idx.shape[:-1]
+    top_k = idx.shape[-1]
+    m = q.shape[-1]
+    idx_flat = idx.reshape(-1, top_k)
+    w_flat = w.reshape(-1, top_k).astype(jnp.float32)
+    scale_col = scale.reshape(-1, 1).astype(jnp.float32)
+    n = idx_flat.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, top_k),
+        in_specs=[
+            pl.BlockSpec((1, top_k), lambda t, k, idx_sref: (t, 0)),
+            pl.BlockSpec(
+                (1, m), lambda t, k, idx_sref: (idx_sref[t, k], 0)
+            ),
+            pl.BlockSpec(
+                (1, 1), lambda t, k, idx_sref: (idx_sref[t, k], 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, m), lambda t, k, idx_sref: (t, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel_quant,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(idx_flat, w_flat, q, scale_col)
+    return out.reshape(*lead, m)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def gather_interp_quant(q, scale, idx, w, interpret=True):
+    """Differentiable wrapper for the fused-dequant Pallas gather.
+
+    Scalar-prefetch pallas_calls have no autodiff rule, and a quantized
+    table is a frozen store (its training path is the tiered write-back),
+    so the only live cotangent is dw — the dequantized-row dot, computed
+    with a plain jnp gather in the backward.  Matches the dw contract of
+    `repro.kernels.ops.lram_lookup`.
+    """
+    return gather_interp_quant_pallas(q, scale, idx, w, interpret=interpret)
+
+
+def _quant_fwd(q, scale, idx, w, interpret):
+    out = gather_interp_quant_pallas(q, scale, idx, w, interpret=interpret)
+    return out, (q, scale, idx, w)
+
+
+def _quant_bwd(interpret, res, g):
+    q, scale, idx, w = res
+    rows = jnp.take(q, idx, axis=0).astype(jnp.float32) \
+        * jnp.take(scale, idx, axis=0)[..., None]
+    dw = jnp.einsum("...m,...km->...k", g.astype(jnp.float32), rows)
+    zero = (np.zeros(q.shape, jax.dtypes.float0)
+            if not jnp.issubdtype(q.dtype, jnp.inexact)
+            else jnp.zeros(q.shape, q.dtype))
+    return (
+        zero,
+        jnp.zeros(scale.shape, scale.dtype),
+        np.zeros(idx.shape, jax.dtypes.float0),
+        dw.astype(w.dtype),
+    )
+
+
+gather_interp_quant.defvjp(_quant_fwd, _quant_bwd)

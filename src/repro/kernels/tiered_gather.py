@@ -95,6 +95,77 @@ def tiered_gather_pallas(
     return out.reshape(*lead, m)
 
 
+def _kernel_quant(idx_ref, slot_ref, w_ref, row_ref, scale_ref, out_ref):
+    del idx_ref, slot_ref  # consumed by the index_map
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # fused dequant: the cached row arrives in its 1-byte form; its fp32
+    # scale rides a (1, 1) block through the same indirected index_map, so
+    # the accumulate stays fp32 while the row DMA shrinks 4x
+    out_ref[...] += (w_ref[0, k] * scale_ref[0, 0]) \
+        * row_ref[...].astype(out_ref.dtype)
+
+
+def tiered_gather_quant_pallas(
+    cache_flat: jax.Array,
+    scale_flat: jax.Array,
+    idx: jax.Array,
+    slot_table: jax.Array,
+    w: jax.Array,
+    *,
+    shard_rows: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Quantized twin of `tiered_gather_pallas`: the device cache holds
+    int8/fp8 payload rows plus per-row fp32 scales; both are gathered
+    through the same shard->slot indirection and dequantized in VMEM.
+
+    Args:
+      cache_flat: (cache_slots * shard_rows, m) quantized device cache.
+      scale_flat: (cache_slots * shard_rows,) fp32 per-row scales.
+      idx / slot_table / w / shard_rows: as in `tiered_gather_pallas`.
+    """
+    if shard_rows & (shard_rows - 1):
+        raise ValueError("shard_rows must be a power of two")
+    log2r = shard_rows.bit_length() - 1
+    lead = idx.shape[:-1]
+    top_k = idx.shape[-1]
+    m = cache_flat.shape[-1]
+    idx_flat = idx.reshape(-1, top_k).astype(jnp.int32)
+    w_flat = w.reshape(-1, top_k).astype(jnp.float32)
+    scale_col = scale_flat.reshape(-1, 1).astype(jnp.float32)
+    n = idx_flat.shape[0]
+
+    def _row_index(t, k, idx_sref, slot_sref):
+        gid = idx_sref[t, k]
+        slot = slot_sref[gid >> log2r]
+        return (slot * shard_rows + (gid & (shard_rows - 1)), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n, top_k),
+        in_specs=[
+            pl.BlockSpec((1, top_k), lambda t, k, idx_sref, slot_sref: (t, 0)),
+            pl.BlockSpec((1, m), _row_index),
+            pl.BlockSpec((1, 1), _row_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, m), lambda t, k, idx_sref, slot_sref: (t, 0)
+        ),
+    )
+    out = pl.pallas_call(
+        _kernel_quant,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(idx_flat, slot_table.astype(jnp.int32), w_flat, cache_flat, scale_col)
+    return out.reshape(*lead, m)
+
+
 def tiered_gather_ref(
     cache_flat: jax.Array,
     idx: jax.Array,
@@ -110,3 +181,21 @@ def tiered_gather_ref(
         cache_flat, slot * shard_rows + (idx & (shard_rows - 1)), axis=0
     )
     return jnp.einsum("...k,...km->...m", w.astype(jnp.float32), rows)
+
+
+def tiered_gather_quant_ref(
+    cache_flat: jax.Array,
+    scale_flat: jax.Array,
+    idx: jax.Array,
+    slot_table: jax.Array,
+    w: jax.Array,
+    *,
+    shard_rows: int,
+) -> jax.Array:
+    """jnp reference for the quantized indirected gather."""
+    log2r = shard_rows.bit_length() - 1
+    slot = jnp.take(slot_table, idx >> log2r, axis=0)
+    cache_rows = slot * shard_rows + (idx & (shard_rows - 1))
+    rows = jnp.take(cache_flat, cache_rows, axis=0).astype(jnp.float32)
+    ws = w.astype(jnp.float32) * jnp.take(scale_flat, cache_rows, axis=0)
+    return jnp.einsum("...k,...km->...m", ws, rows)

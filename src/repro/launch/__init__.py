@@ -1,0 +1,14 @@
+"""End-to-end drivers (each runnable as `python -m repro.launch.<name>`).
+
+Public surface:
+
+  * `repro.launch.train`  — training loop: config -> init -> jitted step
+    (grads [+ compression] + Adam with 10x memory LR, or tiered
+    write-back) -> checkpoints/auto-resume -> straggler log
+  * `repro.launch.serve`  — batched serving: prefill -> greedy decode with
+    per-step latency, tiered-cache warmup/prefetch and hit-rate reporting
+    (`--json` for a machine-readable summary)
+  * `repro.launch.dryrun` — lower/compile/cost-analyze every arch x mode
+    without running it (dispatch table for the smoke matrix)
+  * `repro.launch.mesh`   — host-local mesh construction helpers
+"""

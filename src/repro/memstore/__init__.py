@@ -3,8 +3,14 @@
 Capacity past device memory for the LRAM value table (paper: "billions of
 entries"): shard the (N, m) table into host RAM / disk, keep the hot shards
 in a device-resident cache behind an indirection table, and serve lookups
-through `interp_impl="tiered"` (see repro.core.lram).  Design narrative in
-docs/memstore.md.
+through `interp_impl="tiered"` (see repro.core.lram).  Shards can be held
+quantized (int8/fp8 payload + per-row scales, `TieredSpec.quant`) on both
+tiers, shrinking capacity cost and fill traffic ~4x.  Design narrative in
+docs/memstore.md; lookup-path map in docs/architecture.md.
+
+Public surface: `TieredSpec` (static layout config), `TieredValueStore`
+(the store), `tiered_interp` (differentiable lookup hook), `find_stores`
+(locate stores in a pytree).
 """
 
 from repro.memstore.store import (  # noqa: F401

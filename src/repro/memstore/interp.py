@@ -17,6 +17,12 @@ d values is the paper's sparse scatter-add (here: host-side into tiered
 shards), d w is the gathered-row dot.  Query gradients keep flowing through
 `w` exactly as in the dense reference path, so swapping a model between
 dense and tiered changes *where the table lives*, not its gradients.
+
+Quantized stores (`TieredSpec.quant`) need no special casing here: the
+forward callback (`gather_rows_host`) hands back already-dequantized fp32
+rows, and the backward's (index, w (x) g) pairs feed `apply_writeback`,
+which requantizes dirty rows with stochastic rounding (see
+repro.memstore.store / repro.quant).
 """
 
 from __future__ import annotations

@@ -33,8 +33,16 @@ lattice-bucket rows:
     host shard on eviction, `flush()`, or checkpoint save.  This mirrors how
     production embedding tables own their sparse optimizer step instead of
     routing the table through the dense Adam.
+  * **Quantized storage** (`TieredSpec.quant` of int8 | fp8): both tiers
+    hold 1-byte payload rows plus per-row fp32 scales (`repro.quant`), so
+    host capacity, the device-cache budget, and every host->device fill
+    shrink ~4x.  Gathers dequantize on device (the interpolation stays
+    fp32); the write-back dequantizes touched rows, applies the update,
+    and requantizes with **stochastic rounding** so sub-quantum updates
+    survive in expectation.
 
-See docs/memstore.md for the full design narrative.
+See docs/memstore.md for the full design narrative and docs/architecture.md
+for where this store sits among the four lookup paths.
 """
 
 from __future__ import annotations
@@ -49,6 +57,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import quant
+
 
 @dataclasses.dataclass(frozen=True)
 class TieredSpec:
@@ -59,6 +69,7 @@ class TieredSpec:
     backing: str = "ram"        # ram | mmap
     backing_dir: str | None = None   # mmap only; default: a tempdir
     use_pallas: bool = False    # indirected-gather kernel vs jnp reference
+    quant: str = "none"         # none | int8 | fp8: 1-byte rows + row scales
 
     def __post_init__(self):
         if self.shard_rows & (self.shard_rows - 1):
@@ -67,6 +78,8 @@ class TieredSpec:
             raise ValueError("need at least one cache slot")
         if self.backing not in ("ram", "mmap"):
             raise ValueError(f"unknown backing {self.backing!r}")
+        if self.quant != "none":
+            quant.check_kind(self.quant)
 
 
 class TieredValueStore:
@@ -87,18 +100,32 @@ class TieredValueStore:
         self.spec = spec
         self.num_rows = num_rows
         self.m = m
-        self.dtype = np.dtype(dtype)
+        self.dtype = np.dtype(dtype)  # logical dtype (dequantized values)
+        self.quant = spec.quant
+        self.storage_dtype = (
+            quant.storage_dtype(self.quant) if self.quant != "none"
+            else self.dtype
+        )
         self.shard_rows = spec.shard_rows
         self.num_shards = num_rows // spec.shard_rows
         self.cache_slots = min(spec.cache_slots, self.num_shards)
         self._log2R = self.shard_rows.bit_length() - 1
 
-        self._host = self._alloc_host()
-        # device tier + indirection
+        self._host, self._host_scale = self._alloc_host()
+        # device tier + indirection; quantized stores cache the 1-byte
+        # payload + per-row scales, so the cache budget also shrinks ~4x
         self.cache_np = np.zeros(
-            (self.cache_slots, self.shard_rows, m), np.float32
+            (self.cache_slots, self.shard_rows, m),
+            self.storage_dtype if self.quant != "none" else np.float32,
+        )
+        self.cache_scale_np = (
+            np.zeros((self.cache_slots, self.shard_rows), np.float32)
+            if self.quant != "none" else None
         )
         self._cache_dev: jax.Array | None = None
+        self._scale_dev: jax.Array | None = None
+        # write-back requantization noise (stochastic rounding, int8)
+        self._wb_rng = np.random.default_rng(0)
         self._shard_slot = np.full(self.num_shards, -1, np.int32)
         self._slot_shard = np.full(self.cache_slots, -1, np.int32)
         self._lru: collections.OrderedDict[int, int] = collections.OrderedDict()
@@ -115,31 +142,58 @@ class TieredValueStore:
 
     # ------------------------------------------------------------------ init
 
-    def _alloc_host(self) -> np.ndarray:
+    def _alloc_host(self) -> tuple[np.ndarray, np.ndarray | None]:
         shape = (self.num_shards, self.shard_rows, self.m)
+        sshape = shape[:-1]
+        vdtype = self.storage_dtype
         if self.spec.backing == "ram":
-            return np.zeros(shape, self.dtype)
+            values = np.zeros(shape, vdtype)
+            scales = (np.zeros(sshape, np.float32)
+                      if self.quant != "none" else None)
+            return values, scales
         d = self.spec.backing_dir or tempfile.mkdtemp(prefix="memstore_")
         os.makedirs(d, exist_ok=True)
         path = os.path.join(d, f"values_{self.num_rows}x{self.m}.npy")
-        return np.lib.format.open_memmap(
-            path, mode="w+", dtype=self.dtype, shape=shape
+        values = np.lib.format.open_memmap(
+            path, mode="w+", dtype=vdtype, shape=shape
         )
+        scales = None
+        if self.quant != "none":
+            spath = os.path.join(d, f"scales_{self.num_rows}x{self.m}.npy")
+            scales = np.lib.format.open_memmap(
+                spath, mode="w+", dtype=np.float32, shape=sshape
+            )
+        return values, scales
 
     @classmethod
     def from_dense(cls, values: np.ndarray, spec: TieredSpec,
                    **kw) -> "TieredValueStore":
         values = np.asarray(values)
         n, m = values.shape
-        store = cls(n, m, spec, dtype=values.dtype, **kw)
-        store._host[...] = values.reshape(store.num_shards,
-                                          store.shard_rows, m)
+        dtype = values.dtype if spec.quant == "none" else np.float32
+        store = cls(n, m, spec, dtype=dtype, **kw)
+        store._fill_host(values)
         return store
 
+    def _fill_host(self, values: np.ndarray) -> None:
+        shaped = values.reshape(self.num_shards, self.shard_rows, self.m)
+        if self.quant == "none":
+            self._host[...] = shaped
+        else:
+            # nearest rounding here (init / load): identical to the dense
+            # QuantizedTable built from the same draw
+            q, s = quant.quantize_rows_np(shaped, self.quant)
+            self._host[...] = q
+            self._host_scale[...] = s
+
     def to_dense(self) -> np.ndarray:
-        """Flush dirty slots and materialize the full table (tests only)."""
+        """Flush dirty slots and materialize the full (dequantized) table."""
         self.flush()
-        return np.array(self._host).reshape(self.num_rows, self.m)
+        if self.quant == "none":
+            return np.array(self._host).reshape(self.num_rows, self.m)
+        return quant.dequantize_rows_np(
+            np.asarray(self._host), np.asarray(self._host_scale)
+        ).reshape(self.num_rows, self.m)
 
     def load_dense(self, values: np.ndarray) -> None:
         """Replace table contents; invalidates the cache."""
@@ -149,9 +203,7 @@ class TieredValueStore:
                 f"shape {values.shape} != {(self.num_rows, self.m)}"
             )
         self._invalidate_cache()
-        self._host[...] = values.reshape(
-            self.num_shards, self.shard_rows, self.m
-        )
+        self._fill_host(values)
 
     def _invalidate_cache(self) -> None:
         self._shard_slot[:] = -1
@@ -161,6 +213,7 @@ class TieredValueStore:
         self._dirty.clear()
         self._dev_stale.clear()
         self._cache_dev = None
+        self._scale_dev = None
 
     # ----------------------------------------------------------- addressing
 
@@ -192,6 +245,8 @@ class TieredValueStore:
                 self._shard_slot[victim] = -1
                 self.stats["evictions"] += 1
             self.cache_np[slot] = self._host[s]
+            if self.quant != "none":
+                self.cache_scale_np[slot] = self._host_scale[s]
             self._shard_slot[s] = slot
             self._slot_shard[slot] = s
             self._lru[s] = slot
@@ -252,6 +307,10 @@ class TieredValueStore:
     def _sync_device(self) -> None:
         if self._cache_dev is None:
             self._cache_dev = jnp.asarray(self.cache_np)
+            self.stats["fill_bytes"] += self.cache_np.nbytes
+            if self.quant != "none":
+                self._scale_dev = jnp.asarray(self.cache_scale_np)
+                self.stats["fill_bytes"] += self.cache_scale_np.nbytes
             self._dev_stale.clear()
             return
         if not self._dev_stale:
@@ -259,12 +318,24 @@ class TieredValueStore:
         slots = np.fromiter(sorted(self._dev_stale), np.int32)
         block = jnp.asarray(self.cache_np[slots])  # one stacked host->device
         self._cache_dev = self._cache_dev.at[jnp.asarray(slots)].set(block)
+        self.stats["fill_bytes"] += self.cache_np[slots].nbytes
+        if self.quant != "none":
+            sblock = jnp.asarray(self.cache_scale_np[slots])
+            self._scale_dev = self._scale_dev.at[jnp.asarray(slots)].set(
+                sblock
+            )
+            self.stats["fill_bytes"] += self.cache_scale_np[slots].nbytes
         self._dev_stale.clear()
 
     @property
     def cache_dev(self) -> jax.Array:
         self._sync_device()
         return self._cache_dev
+
+    @property
+    def cache_scale_dev(self) -> jax.Array:
+        self._sync_device()
+        return self._scale_dev
 
     # ------------------------------------------------------------- lookups
 
@@ -277,30 +348,47 @@ class TieredValueStore:
         flat = idx_np.reshape(-1)
         shard, row, slot, mask = self._map(flat)
         slot_rows = np.where(mask, slot * self.shard_rows + row, 0)
+        quantized = self.quant != "none"
         cache_flat = self.cache_dev.reshape(-1, self.m)
-        table = cache_flat
+        scale_flat = (self.cache_scale_dev.reshape(-1) if quantized
+                      else None)
+        table, scales = cache_flat, scale_flat
         if not mask.all():
-            ovf = self._host[shard[~mask], row[~mask]].astype(np.float32)
-            slot_rows[~mask] = cache_flat.shape[0] + np.arange(len(ovf))
+            inv = ~mask
+            ovf = self._host[shard[inv], row[inv]]
+            slot_rows[inv] = cache_flat.shape[0] + np.arange(len(ovf))
             # pad the overflow block to a power-of-two bucket: the jitted
             # gather then sees O(log batch) distinct table shapes, not one
             # fresh XLA compile per distinct uncached-row count
             pad = 1 << max(0, (len(ovf) - 1)).bit_length()
-            block = np.zeros((pad, self.m), np.float32)
+            block = np.zeros((pad, self.m), self.cache_np.dtype)
             block[:len(ovf)] = ovf
             table = jnp.concatenate([cache_flat, jnp.asarray(block)], axis=0)
+            if quantized:  # overflow rows stay 1-byte: scales ride along
+                sblock = np.zeros((pad,), np.float32)
+                sblock[:len(ovf)] = self._host_scale[shard[inv], row[inv]]
+                scales = jnp.concatenate(
+                    [scale_flat, jnp.asarray(sblock)], axis=0
+                )
         w_flat = jnp.asarray(w).reshape(-1, top_k).astype(jnp.float32)
         sr = jnp.asarray(slot_rows.reshape(-1, top_k).astype(np.int32))
         if self.spec.use_pallas and mask.all():
             from repro.kernels import tiered_gather as tg
-            out = tg.tiered_gather_pallas(
-                cache_flat,
-                jnp.asarray(flat.reshape(-1, top_k).astype(np.int32)),
-                jnp.asarray(self._shard_slot),
-                w_flat,
-                shard_rows=self.shard_rows,
-                interpret=jax.default_backend() != "tpu",
-            )
+            interpret = jax.default_backend() != "tpu"
+            idx_dev = jnp.asarray(flat.reshape(-1, top_k).astype(np.int32))
+            slot_dev = jnp.asarray(self._shard_slot)
+            if quantized:
+                out = tg.tiered_gather_quant_pallas(
+                    cache_flat, scale_flat, idx_dev, slot_dev, w_flat,
+                    shard_rows=self.shard_rows, interpret=interpret,
+                )
+            else:
+                out = tg.tiered_gather_pallas(
+                    cache_flat, idx_dev, slot_dev, w_flat,
+                    shard_rows=self.shard_rows, interpret=interpret,
+                )
+        elif quantized:
+            out = _gather_rows_device_quant(table, scales, sr, w_flat)
         else:
             out = _gather_rows_device(table, sr, w_flat)
         return out.reshape(*lead, self.m)
@@ -313,11 +401,22 @@ class TieredValueStore:
         flat = idx_np.reshape(-1)
         shard, row, slot, mask = self._map(flat)
         rows = np.empty((flat.size, self.m), np.float32)
-        if mask.any():
-            rows[mask] = self.cache_np[slot[mask], row[mask]]
-        if not mask.all():
-            inv = ~mask
-            rows[inv] = self._host[shard[inv], row[inv]]
+        if self.quant != "none":
+            scales = np.empty((flat.size,), np.float32)
+            if mask.any():
+                rows[mask] = self.cache_np[slot[mask], row[mask]]
+                scales[mask] = self.cache_scale_np[slot[mask], row[mask]]
+            if not mask.all():
+                inv = ~mask
+                rows[inv] = self._host[shard[inv], row[inv]]
+                scales[inv] = self._host_scale[shard[inv], row[inv]]
+            rows *= scales[:, None]  # dequant: callback contract is fp32
+        else:
+            if mask.any():
+                rows[mask] = self.cache_np[slot[mask], row[mask]]
+            if not mask.all():
+                inv = ~mask
+                rows[inv] = self._host[shard[inv], row[inv]]
         return rows.reshape(*idx_np.shape, self.m)
 
     # ------------------------------------------------------------ training
@@ -335,6 +434,10 @@ class TieredValueStore:
         upd = -self.writeback_lr * np.asarray(wg, np.float32).reshape(
             -1, self.m
         )
+        if self.quant != "none":
+            self._apply_writeback_quant(flat, upd)
+            self.stats["writebacks"] += 1
+            return
         shard, row = self._split(flat)
         slot = self._shard_slot[shard].astype(np.int64)
         mask = slot >= 0
@@ -351,38 +454,123 @@ class TieredValueStore:
             )
         self.stats["writebacks"] += 1
 
+    def _apply_writeback_quant(self, flat: np.ndarray,
+                               upd: np.ndarray) -> None:
+        """Quantization-aware sparse step: dequantize each touched row,
+        apply the accumulated update, requantize with a fresh per-row scale
+        and **stochastic rounding** (int8; `repro.quant`) so updates smaller
+        than one quantization step survive in expectation — the same
+        error-containment idea as the int8 gradient codec in
+        `repro.optim.compression`, applied at the storage boundary."""
+        uniq, inv = np.unique(flat, return_inverse=True)
+        acc = np.zeros((len(uniq), self.m), np.float32)
+        np.add.at(acc, inv, upd)  # duplicate indices accumulate first
+        shard, row = self._split(uniq)
+        slot = self._shard_slot[shard].astype(np.int64)
+        mask = slot >= 0
+        rng = self._wb_rng if self.quant == "int8" else None
+        if mask.any():
+            sl, rw = slot[mask], row[mask]
+            cur = quant.dequantize_rows_np(
+                self.cache_np[sl, rw], self.cache_scale_np[sl, rw]
+            )
+            q, s = quant.quantize_rows_np(
+                cur + acc[mask], self.quant, rng=rng
+            )
+            self.cache_np[sl, rw] = q
+            self.cache_scale_np[sl, rw] = s
+            touched = set(np.unique(sl).tolist())
+            self._dirty |= touched
+            self._dev_stale |= touched
+        if not mask.all():
+            nm = ~mask
+            sh, rw = shard[nm], row[nm]
+            cur = quant.dequantize_rows_np(
+                self._host[sh, rw], self._host_scale[sh, rw]
+            )
+            q, s = quant.quantize_rows_np(
+                cur + acc[nm], self.quant, rng=rng
+            )
+            self._host[sh, rw] = q
+            self._host_scale[sh, rw] = s
+
+    def _flush_slot_to_host(self, slot: int) -> None:
+        shard = self._slot_shard[slot]
+        if self.quant != "none":
+            self._host[shard] = self.cache_np[slot]
+            self._host_scale[shard] = self.cache_scale_np[slot]
+        else:
+            self._host[shard] = self.cache_np[slot].astype(self.dtype)
+
     def _writeback_slot(self, slot: int) -> None:
         if slot in self._dirty:
-            self._host[self._slot_shard[slot]] = self.cache_np[slot].astype(
-                self.dtype
-            )
+            self._flush_slot_to_host(slot)
             self._dirty.discard(slot)
             self.stats["dirty_writebacks"] += 1
 
     def flush(self) -> None:
         """Write every dirty cached shard back to its host shard."""
         for slot in sorted(self._dirty):
-            self._host[self._slot_shard[slot]] = self.cache_np[slot].astype(
-                self.dtype
-            )
+            self._flush_slot_to_host(slot)
             self.stats["dirty_writebacks"] += 1
         self._dirty.clear()
 
     # ---------------------------------------------------------- checkpoint
 
     def shard_host(self, i: int) -> np.ndarray:
-        """Shard `i` as seen through the cache (dirty slots win)."""
+        """Shard `i`'s stored payload as seen through the cache (dirty slots
+        win).  Quantized stores return the 1-byte payload; its scales come
+        from `shard_scale_host`."""
         slot = int(self._shard_slot[i])
         if slot >= 0 and slot in self._dirty:
+            if self.quant != "none":
+                return np.asarray(self.cache_np[slot])
             return self.cache_np[slot].astype(self.dtype)
         return np.asarray(self._host[i])
 
-    def load_shard(self, i: int, arr: np.ndarray) -> None:
+    def shard_scale_host(self, i: int) -> np.ndarray:
+        """Per-row fp32 scales of shard `i` (quantized stores only)."""
+        assert self.quant != "none"
+        slot = int(self._shard_slot[i])
+        if slot >= 0 and slot in self._dirty:
+            return np.asarray(self.cache_scale_np[slot])
+        return np.asarray(self._host_scale[i])
+
+    def load_shard(self, i: int, arr: np.ndarray,
+                   scale: np.ndarray | None = None) -> None:
+        """Replace shard `i`.  `arr` may be fp values (requantized on the
+        way in if this store is quantized) or a 1-byte payload with its
+        per-row `scale` (dequantized if this store is dense) — this is what
+        makes quantized<->dense checkpoint restore work shard by shard."""
         if arr.shape != (self.shard_rows, self.m):
             raise ValueError(
                 f"shard {i}: shape {arr.shape} != "
                 f"{(self.shard_rows, self.m)}"
             )
+        if scale is not None and arr.dtype.itemsize != 1:
+            raise ValueError("scale given but payload is not quantized")
+        if self.quant != "none":
+            if scale is None:  # fp input: quantize (nearest) on the way in
+                q, s = quant.quantize_rows_np(
+                    np.asarray(arr, np.float32), self.quant
+                )
+            elif arr.dtype != self.storage_dtype:  # cross-kind: requantize
+                q, s = quant.quantize_rows_np(
+                    quant.dequantize_rows_np(arr, scale), self.quant
+                )
+            else:
+                q, s = arr, np.asarray(scale, np.float32)
+            self._host[i] = q
+            self._host_scale[i] = s
+            slot = int(self._shard_slot[i])
+            if slot >= 0:  # refresh the cached copy too
+                self.cache_np[slot] = q
+                self.cache_scale_np[slot] = s
+                self._dirty.discard(slot)
+                self._dev_stale.add(slot)
+            return
+        if scale is not None:  # quantized checkpoint into a dense store
+            arr = quant.dequantize_rows_np(arr, scale)
         self._host[i] = arr.astype(self.dtype)
         slot = int(self._shard_slot[i])
         if slot >= 0:  # refresh the cached copy too
@@ -396,8 +584,14 @@ class TieredValueStore:
         self.stats = {
             "lookups": 0, "hits": 0, "misses": 0, "uncached": 0,
             "fills": 0, "evictions": 0, "writebacks": 0,
-            "dirty_writebacks": 0,
+            "dirty_writebacks": 0, "fill_bytes": 0,
         }
+
+    def bytes_per_entry(self) -> int:
+        """Host-tier storage bytes per table row (payload + scale)."""
+        if self.quant == "none":
+            return self.m * self.dtype.itemsize
+        return quant.bytes_per_entry(self.m, self.quant)
 
     def hit_rate(self) -> float:
         total = self.stats["hits"] + self.stats["misses"] \
@@ -413,7 +607,7 @@ class TieredValueStore:
             f"TieredValueStore(rows={self.num_rows}, m={self.m}, "
             f"shards={self.num_shards}x{self.shard_rows}, "
             f"slots={self.cache_slots}, backing={self.spec.backing!r}, "
-            f"hit_rate={self.hit_rate():.3f})"
+            f"quant={self.quant!r}, hit_rate={self.hit_rate():.3f})"
         )
 
 
@@ -422,6 +616,16 @@ def _gather_rows_device(table, slot_rows, w):
     """rows = table[slot_rows]; out = einsum('nk,nkm->nm', w, rows)."""
     rows = jnp.take(table, slot_rows, axis=0)
     return jnp.einsum("nk,nkm->nm", w, rows)
+
+
+@jax.jit
+def _gather_rows_device_quant(table_q, table_scale, slot_rows, w):
+    """Quantized twin: rows are gathered in 1-byte form, dequantized by the
+    gathered per-row scales, and interpolated in fp32 — folding the scale
+    into the weights so no (n, k, m) fp32 row tensor is materialized."""
+    rows = jnp.take(table_q, slot_rows, axis=0)  # (n, k, m) int8/fp8
+    ws = w * jnp.take(table_scale, slot_rows, axis=0)
+    return jnp.einsum("nk,nkm->nm", ws, rows.astype(jnp.float32))
 
 
 # Leafless pytree node: tree maps (grad, optimizer, sharding, jit flattening)

@@ -1,0 +1,17 @@
+"""Model blocks that host the memory layer.
+
+Public surface:
+
+  * `repro.models.config`      — `ModelConfig`: one dataclass describing
+    every registered arch (family, dims, objective, `lram`/`lram_layers`
+    for memory-augmented FFNs, `remat`, …)
+  * `repro.models.transformer` — init/forward/loss_fn, prefill +
+    decode_step (KV caches), the host for dense / moe / mamba blocks and
+    the LRAM memory FFN
+  * `repro.models.attention`   — MHA/GQA attention with cache support
+  * `repro.models.mlp`         — dense FFN blocks
+  * `repro.models.moe`         — mixture-of-experts FFN
+  * `repro.models.mamba2`      — Mamba-2 SSM blocks
+
+Configs select blocks per layer; see `repro.configs` for the registry.
+"""

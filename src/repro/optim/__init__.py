@@ -1,3 +1,13 @@
+"""Optimizers and gradient codecs.
+
+Public surface: `OptimConfig` / `adam_init` / `adam_update` (Adam with the
+paper's 10x memory-value LR group; tiered stores are leafless and own
+their write-back step instead), `schedule_lr`, `global_norm`, and the
+all-reduce gradient codecs `compression_init` / `compress_gradients`
+(int8 with error feedback — the same symmetric grid as the `repro.quant`
+table codec — and magnitude top-k).
+"""
+
 from repro.optim.adam import (  # noqa: F401
     OptimConfig,
     adam_init,

@@ -17,7 +17,6 @@ repro.distributed.collectives.compressed_psum for the wire form).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -37,9 +36,12 @@ def compression_init(params, kind: str = "none", rho: float = 0.01):
 
 
 def _quant_int8(g):
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
-    return q.astype(jnp.float32) * scale
+    # the shared int8 grid (repro.quant, also the value-table storage
+    # codec); per-leaf here, with the residual fed back by the caller
+    # instead of stochastic rounding
+    from repro import quant
+
+    return quant.int8_qdq(g)
 
 
 def _topk_mask(g, rho: float):

@@ -1,0 +1,227 @@
+"""Low-precision value-table storage: per-row symmetric quantization.
+
+The LRAM value table is the memory-layer parameter that dominates bytes
+(N * m floats); Memory Layers at Scale (Berges et al., 2024) and
+Product-Key Memories (Lample et al., 2019) both show such tables tolerate
+low-precision storage with negligible quality loss.  This module is the
+single source of truth for how this repo stores a table row in fewer bits:
+
+  * **int8**  — symmetric, per-row fp32 scale ``s_r = max|v_r| / 127``;
+    stored row is ``round(v_r / s_r)`` in int8, dequant is ``q * s_r``.
+  * **fp8**   — ``float8_e4m3fn`` payload (via ml_dtypes, which JAX already
+    depends on) with per-row scale ``max|v_r| / 448`` mapping each row onto
+    the format's full dynamic range.
+
+Per *row* because a lookup touches whole rows: the gather can fetch the
+row's scale alongside its payload and dequantize in-register, so the
+weighted interpolation still runs in fp32 while rows move (HBM->VMEM, or
+host->device in the tiered store) at 1 byte/element.  ``m`` floats of
+payload become ``m`` bytes + one fp32 scale: 68 B vs 256 B per entry at
+the paper's m=64 — a 3.76x capacity multiplier.
+
+Write-back training on a quantized table uses **stochastic rounding**
+(``round_mode="stochastic"``): ``floor(x + u)`` with ``u ~ U[0, 1)`` is
+unbiased (``E[floor(x+u)] = x``), so the sparse SGD step survives
+requantization in expectation even when single updates are smaller than
+one quantization step.  The int8 gradient codec in `repro.optim.compression`
+uses the same grid through `int8_qdq` below (its in-graph jnp form;
+`quantize_int8` is the host-side numpy form the tiered store uses).
+
+Dense (non-tiered) quantized tables live in a `QuantizedTable` pytree so
+they ride ``params["values"]`` through jit; integer payloads are naturally
+opaque to autodiff (float0 tangents), matching the tiered store's stance
+that the table owns its own update rule.  Placement of the dequant in each
+lookup path is mapped in docs/architecture.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # ml_dtypes ships with jax; guard anyway so int8 works without it
+    import ml_dtypes
+
+    _FP8_DTYPE: Any = np.dtype(ml_dtypes.float8_e4m3fn)
+except ImportError:  # pragma: no cover - container always has ml_dtypes
+    _FP8_DTYPE = None
+
+QUANT_KINDS = ("int8", "fp8")
+
+_EPS = 1e-12
+_QMAX = {"int8": 127.0, "fp8": 448.0}  # float8_e4m3fn max finite
+
+
+def check_kind(kind: str) -> str:
+    if kind not in QUANT_KINDS:
+        raise ValueError(f"unknown quant kind {kind!r}; known: {QUANT_KINDS}")
+    if kind == "fp8" and _FP8_DTYPE is None:
+        raise ValueError("fp8 tables need ml_dtypes (pip dep of jax)")
+    return kind
+
+
+def storage_dtype(kind: str) -> np.dtype:
+    """numpy dtype of the stored payload (1 byte/element for both kinds)."""
+    check_kind(kind)
+    return np.dtype(np.int8) if kind == "int8" else _FP8_DTYPE
+
+
+def qmax(kind: str) -> float:
+    check_kind(kind)
+    return _QMAX[kind]
+
+
+def bytes_per_entry(m: int, kind: str | None) -> int:
+    """Storage bytes for one (m,)-row: payload + per-row fp32 scale."""
+    if kind in (None, "none"):
+        return 4 * m
+    check_kind(kind)
+    return m * storage_dtype(kind).itemsize + 4
+
+
+# ---------------------------------------------------------------------------
+# numpy (host-side: tiered shards, write-back, checkpoints)
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x: np.ndarray, *, axis=None, rng=None):
+    """Symmetric int8 quantization: returns (q int8, scale fp32).
+
+    axis=None  -> one scale for the whole array (the gradient-codec form);
+    axis=-1    -> one scale per row (the value-table form).
+    rng        -> stochastic rounding (unbiased); None rounds to nearest.
+    """
+    x = np.asarray(x, np.float32)
+    amax = np.abs(x).max(axis=axis, keepdims=axis is not None)
+    scale = np.maximum(amax, _EPS) / 127.0
+    y = x / scale
+    if rng is None:
+        q = np.rint(y)
+    else:
+        q = np.floor(y + rng.random(y.shape, dtype=np.float32))
+    q = np.clip(q, -127, 127).astype(np.int8)
+    return q, np.squeeze(scale, axis) if axis is not None else float(scale)
+
+
+def quantize_rows_np(v: np.ndarray, kind: str, *, rng=None):
+    """Per-row quantization of (..., m) values -> (q, scale (...,)).
+
+    int8 supports stochastic rounding via `rng`; fp8 rounds to nearest
+    (its non-uniform grid has no single-step SR form — documented in
+    docs/memstore.md; the unbiasedness test covers int8, the write-back
+    dtype).
+    """
+    check_kind(kind)
+    v = np.asarray(v, np.float32)
+    if kind == "int8":
+        return quantize_int8(v, axis=-1, rng=rng)
+    amax = np.abs(v).max(axis=-1)
+    scale = (np.maximum(amax, _EPS) / _QMAX["fp8"]).astype(np.float32)
+    q = (v / scale[..., None]).astype(_FP8_DTYPE)
+    return q, scale
+
+
+def dequantize_rows_np(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    """fp32 rows from (q (..., m), scale (...,))."""
+    return q.astype(np.float32) * np.asarray(scale, np.float32)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# jnp (device-side: dense quantized tables, in-graph dequant)
+# ---------------------------------------------------------------------------
+
+def jnp_storage_dtype(kind: str):
+    check_kind(kind)
+    return jnp.int8 if kind == "int8" else jnp.float8_e4m3fn
+
+
+def int8_qdq(x: jax.Array) -> jax.Array:
+    """In-graph symmetric int8 quantize->dequantize (one scale per array):
+    what survives an int8 wire format.  Used by the gradient codec in
+    `repro.optim.compression` (which feeds the residual back) — the same
+    grid the value-table storage uses per row."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), _EPS) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTable:
+    """A dense (N, m) value table stored quantized with per-row scales.
+
+    Sits at ``params["values"]`` in place of the fp32 array; the reference
+    and Pallas lookup paths detect it and dequantize at gather time.  The
+    payload is an integer (or fp8) pytree leaf, so autodiff yields no
+    cotangent for it — a quantized dense table is a frozen lookup store
+    (training a quantized table goes through the tiered store's
+    stochastic-rounding write-back instead).
+    """
+
+    q: jax.Array       # (N, m) int8 | float8_e4m3fn
+    scale: jax.Array   # (N,) fp32
+    kind: str = "int8"
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.kind
+
+    @classmethod
+    def tree_unflatten(cls, kind, children):
+        q, scale = children
+        return cls(q=q, scale=scale, kind=kind)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def num_rows(self) -> int:
+        return self.q.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.q.shape[-1]
+
+    def dequantize(self) -> jax.Array:
+        return dequantize_rows(self.q, self.scale)
+
+    @classmethod
+    def from_dense(cls, values, kind: str) -> "QuantizedTable":
+        q, scale = quantize_rows_np(np.asarray(values), check_kind(kind))
+        return cls(q=jnp.asarray(q), scale=jnp.asarray(scale), kind=kind)
+
+
+def gather_interp_quant(table: QuantizedTable, idx: jax.Array,
+                        w: jax.Array) -> jax.Array:
+    """sum_k w_k * dequant(q[idx_k]) -> (..., m).  Reference path: rows are
+    gathered in their 1-byte form and dequantized in-graph, so the weighted
+    sum runs in fp32 but the table reads move 4x fewer bytes."""
+    rows = jnp.take(table.q, idx, axis=0)
+    scales = jnp.take(table.scale, idx, axis=0)
+    return jnp.einsum(
+        "...k,...km->...m", w.astype(jnp.float32),
+        dequantize_rows(rows, scales),
+    )
+
+
+def max_abs_error_bound(scale, w, kind: str = "int8") -> float:
+    """Documented agreement bound between a quantized lookup and its fp32
+    reference:  |out_q - out_fp32| <= sum_k |w_k| * max_r(scale_r) * h
+
+    where h is the half-step of the storage grid in scale units: 1/2 for
+    int8 (uniform grid, step = scale), and 448 * 2**-4 = 28 for fp8 — an
+    e4m3 value rounds within 2**-4 of its magnitude, and magnitudes reach
+    448 * scale at the row max.  The quantization tests assert this bound
+    for every lookup implementation."""
+    half_step = 0.5 if check_kind(kind) == "int8" else _QMAX["fp8"] / 16.0
+    return float(
+        np.max(np.sum(np.abs(np.asarray(w)), axis=-1))
+        * np.max(np.asarray(scale)) * half_step
+    )

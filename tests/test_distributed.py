@@ -109,7 +109,7 @@ def test_compressed_psum_close_to_exact():
     run_in_subprocess(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.distributed._compat import shard_map
         from repro.distributed.collectives import compressed_psum
 
         mesh = jax.make_mesh((8,), ("data",))
