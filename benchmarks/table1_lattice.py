@@ -19,10 +19,11 @@ import numpy as np
 from repro.core import lattice
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rng = np.random.default_rng(0)
     t0 = time.time()
-    q = rng.uniform(0, 16, size=(100_000, 8)).astype(np.float32)
+    n = 20_000 if smoke else 100_000
+    q = rng.uniform(0, 16, size=(n, 8)).astype(np.float32)
     f = jax.jit(lattice.neighbors_and_weights)
     counts, sums = [], []
     for i in range(0, len(q), 20_000):

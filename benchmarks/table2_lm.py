@@ -19,7 +19,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs, data, optim
 from repro.core import lram

@@ -11,7 +11,6 @@ plus a *measured* check that compiled LRAM-lookup FLOPs are O(1) in N
 """
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import lram
 

@@ -12,7 +12,6 @@ RTX 3090, the SHAPES are the claims):
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lram, pkm

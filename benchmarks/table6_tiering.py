@@ -43,9 +43,9 @@ def _stream(rng, steps, *, hot=True):
                % NUM_ROWS).astype(np.int32)
 
 
-def _time_stream(gather, rng, *, hot=True):
+def _time_stream(gather, rng, *, hot=True, steps=STEPS):
     times = []
-    for t, idx in enumerate(_stream(rng, STEPS, hot=hot)):
+    for t, idx in enumerate(_stream(rng, steps, hot=hot)):
         w = rng.normal(size=idx.shape).astype(np.float32)
         t0 = time.perf_counter()
         out = gather(idx, w)
@@ -55,8 +55,10 @@ def _time_stream(gather, rng, *, hot=True):
     return 1e6 * float(np.mean(times))
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
+    steps = 9 if smoke else STEPS
+    fractions = (0.25, 1.0) if smoke else FRACTIONS
     rng = np.random.default_rng(0)
     dense = rng.normal(size=(NUM_ROWS, M)).astype(np.float32) * 0.02
 
@@ -64,18 +66,19 @@ def run():
     ref = jax.jit(lram.gather_interp)
     us = _time_stream(lambda i, w: ref(dense_dev, jnp.asarray(i),
                                        jnp.asarray(w)),
-                      np.random.default_rng(1))
+                      np.random.default_rng(1), steps=steps)
     rows.append(("tiering_dense_reference", us, "hit=1.0 resident=1.0"))
 
     num_shards = NUM_ROWS // SHARD_ROWS
-    for frac in FRACTIONS:
+    for frac in fractions:
         slots = max(1, int(num_shards * frac))
         store = TieredValueStore.from_dense(
             dense, TieredSpec(shard_rows=SHARD_ROWS, cache_slots=slots)
         )
         store.warm()
         store.reset_stats()
-        us = _time_stream(store.gather, np.random.default_rng(1))
+        us = _time_stream(store.gather, np.random.default_rng(1),
+                          steps=steps)
         rows.append((
             f"tiering_cache_{frac:g}",
             us,
@@ -90,7 +93,8 @@ def run():
     )
     store.warm()
     store.reset_stats()
-    us = _time_stream(store.gather, np.random.default_rng(1), hot=False)
+    us = _time_stream(store.gather, np.random.default_rng(1), hot=False,
+                      steps=steps)
     rows.append((
         "tiering_cache_0.25_uniform", us,
         f"hit={store.hit_rate():.3f} uncached={store.stats['uncached']}",

@@ -1,0 +1,106 @@
+"""Table 8 (beyond-paper): serving throughput — static vs continuous batching.
+
+Replays the same mixed-length request trace (random prompt and generation
+lengths, the head-of-line-blocking regime) through `repro.serving` in both
+scheduling modes and reports tokens/sec with p50/p99 per-step latency, at
+each offered load (requests/sec; 0 = closed loop, everything queued at
+t=0).  Compilation is amortised by a warmup replay per engine, so the
+rows measure steady-state scheduling, not jit time.
+
+    PYTHONPATH=src python -m benchmarks.run table8
+    PYTHONPATH=src python -m benchmarks.table8_serving --smoke
+
+The `--smoke` form is the acceptance check: it additionally asserts that
+continuous batching sustains at least the static-batch throughput on the
+closed-loop trace.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import transformer
+from repro.serving import EngineConfig, ServeEngine, synthetic_trace
+
+ARCH = "lram-tiered"
+SLOTS = 4
+MAX_PROMPT, MAX_GEN = 12, 24
+NUM_REQUESTS = 16
+RATES = (0.0, 4.0)            # requests/sec; 0 = closed loop
+SMOKE_REQUESTS = 8
+SMOKE_RATES = (0.0,)
+
+
+def _measure(smoke: bool):
+    cfg = configs.get_smoke_config(ARCH)
+    params, state = transformer.init(jax.random.PRNGKey(0), cfg)
+    num_requests = SMOKE_REQUESTS if smoke else NUM_REQUESTS
+    rates = SMOKE_RATES if smoke else RATES
+    max_gen = MAX_GEN // 2 if smoke else MAX_GEN
+    rows, tps = [], {}
+    for rate in rates:
+        trace = synthetic_trace(
+            np.random.default_rng(0), num_requests,
+            vocab_size=cfg.vocab_size, max_prompt=MAX_PROMPT,
+            max_gen=max_gen, rate=rate, mixed=True,
+        )
+        for mode in ("static", "continuous"):
+            engine = ServeEngine(params, state, cfg, EngineConfig(
+                slots=SLOTS, max_len=MAX_PROMPT + max_gen, mode=mode,
+            ))
+            engine.run(trace)          # warmup: compile every bucket + step
+            report = engine.run(trace)
+            tps[(mode, rate)] = report.tokens_per_sec
+            us = (1e6 / report.tokens_per_sec if report.tokens_per_sec
+                  else 0.0)
+            rows.append((
+                f"serving_{mode}_load{rate:g}", round(us, 3),
+                f"tokens_per_sec={report.tokens_per_sec:.1f} "
+                f"p50_ms={report.p50_ms():.2f} p99_ms={report.p99_ms():.2f} "
+                f"steps={len(report.step_s)}"
+                + (f" hit={report.cache['hit_rate']}" if report.cache
+                   else ""),
+            ))
+    return rows, tps
+
+
+def run(smoke: bool = False):
+    return _measure(smoke)[0]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace + assert continuous >= static "
+                         "throughput on the closed-loop trace")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the benchmark summary document")
+    args = ap.parse_args(argv)
+    rows, tps = _measure(args.smoke)
+    if args.json:
+        print(json.dumps({
+            "rows": [[n, us, d] for n, us, d in rows],
+            "tables": ["table8_serving"],
+            "smoke": args.smoke,
+        }))
+    else:
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived}")
+    if args.smoke:
+        cont, stat = tps[("continuous", 0.0)], tps[("static", 0.0)]
+        ok = cont >= stat
+        print(f"# smoke check: continuous {cont:.1f} tok/s vs "
+              f"static {stat:.1f} tok/s -> {'OK' if ok else 'FAIL'}")
+        if not ok:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,10 +1,13 @@
-"""Batched serving example: prefill + greedy decode on any assigned arch.
+"""Batched serving example: the continuous-batching engine on any arch.
 
     PYTHONPATH=src python examples/serve_batch.py --arch yi-9b
     PYTHONPATH=src python examples/serve_batch.py --arch mamba2-1.3b --gen 32
+    PYTHONPATH=src python examples/serve_batch.py --arch lram-tiered \
+        --mode static   # legacy fixed-batch loop for comparison
 
-Uses the reduced (smoke) configs so it runs on CPU; the same decode_step is
-what the decode_32k / long_500k dry-run cells lower at production scale.
+Uses the reduced (smoke) configs so it runs on CPU; the same decode_step
+the engine ticks is what the decode_32k / long_500k dry-run cells lower at
+production scale.  See docs/serving.md for the engine design.
 """
 
 import argparse
@@ -17,9 +20,12 @@ def main():
     p.add_argument("--arch", default="yi-9b")
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--mode", choices=["continuous", "static"],
+                   default="continuous")
     args = p.parse_args()
     serve.main([
         "--arch", args.arch, "--smoke",
+        "--mode", args.mode,
         "--batch", str(args.batch),
         "--prompt-len", "16",
         "--gen", str(args.gen),

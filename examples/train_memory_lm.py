@@ -12,7 +12,6 @@ baseline-vs-LRAM comparison from Table 2 at the chosen scale.
 """
 
 import argparse
-import sys
 
 from repro.launch import train
 

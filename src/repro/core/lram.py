@@ -36,7 +36,6 @@ of where the dequant sits in each path is docs/architecture.md.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable
 
 import jax

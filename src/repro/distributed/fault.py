@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
 
 
 class SimulatedFailure(RuntimeError):

@@ -11,7 +11,6 @@ point-to-point permutes only, no all-to-alls across pods).
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

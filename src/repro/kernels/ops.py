@@ -20,7 +20,6 @@ On this CPU container the Pallas path runs in interpret mode (set by
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,6 @@ prefill (forward + cache build); decode_32k / long_500k lower decode_step
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback

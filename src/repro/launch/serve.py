@@ -1,148 +1,111 @@
-"""Batched serving driver: prefill a prompt batch, then decode greedily.
+"""Serving driver: a thin CLI over the continuous-batching engine.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
-        --batch 4 --prompt-len 16 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve --arch lram-tiered --smoke \
+        --mode continuous --json
 
-Demonstrates the production serve path the decode_* dry-run cells lower:
-prefill -> KV caches -> repeated decode_step, with per-step latency stats
-(and a straggler-step report from the same monitor the trainer uses).
+Builds a mixed-length request trace (`repro.serving.synthetic_trace`:
+random prompt/generation lengths, optional Poisson arrivals via `--rate`)
+and replays it through `repro.serving.ServeEngine`:
 
-Tiered memory (`lram-tiered` or any arch with `interp_impl="tiered"`): the
-cache is warmed before prefill, each decode step's lattice accesses
-prefetch the next step's shards (decode locality makes the previous step
-the best predictor — the fill into the hot-cache mirror the jitted lookup
-reads overlaps the next step's dense compute), and decode cache hit-rate
-(prefill reported separately) rides the step monitor.
+  * `--mode continuous` (default) — slot-based dynamic batching: sequences
+    are admitted into and retired from a fixed pool of decode slots every
+    step, with no recompilation (per-slot position vector, bucketed
+    batch=1 prefill spliced into the slotted KV cache).
+  * `--mode static` — the legacy fixed-batch loop for comparison: a batch
+    is admitted only when every slot is free, so the longest sequence in a
+    batch blocks the whole pool (head-of-line blocking).
 
-`--json` emits one machine-readable summary document: `rows` mirrors the
-benchmark harness columns (name, us_per_call, derived — see benchmarks/run),
-plus per-step decode latencies and the cache counters.
+Tiered memory (`lram-tiered` & friends): the cache is warmed before the
+first prefill, each step's lattice accesses prefetch the next step's
+shards for the union of in-flight sequences, and per-request decode cache
+hit-rates ride the report.
+
+`--json` emits one machine-readable summary document whose `rows` mirror
+the benchmark harness columns (name, us_per_call, derived — the schema
+`benchmarks/run.py --json` shares; see `benchmarks.run.validate_summary`),
+plus per-step latencies, p50/p99, tokens/sec, and per-request records.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs, memstore
-from repro.distributed import fault
+from repro import configs
 from repro.models import transformer
+from repro.serving import EngineConfig, ServeEngine, synthetic_trace
 
 
-def main(argv=None):
+def build_argparser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser()
-    p.add_argument("--arch", default="yi-9b")
+    p.add_argument("--arch", default="lram-tiered")
     p.add_argument("--smoke", action="store_true")
-    p.add_argument("--batch", type=int, default=4)
-    p.add_argument("--prompt-len", type=int, default=16)
-    p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--mode", choices=["continuous", "static"],
+                   default="continuous")
+    p.add_argument("--batch", type=int, default=4,
+                   help="decode slots (continuous) / batch size (static)")
+    p.add_argument("--prompt-len", type=int, default=16,
+                   help="max prompt length in the trace")
+    p.add_argument("--gen", type=int, default=16,
+                   help="max generation budget per request")
+    p.add_argument("--requests", type=int, default=None,
+                   help="trace size (default: 2x --batch)")
+    p.add_argument("--rate", type=float, default=0.0,
+                   help="offered load in requests/sec (0 = all at t=0)")
+    p.add_argument("--fixed-len", action="store_true",
+                   help="pin every request to (--prompt-len, --gen) instead "
+                        "of the mixed-length trace")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--json", action="store_true",
                    help="emit a machine-readable summary (benchmark-harness "
-                        "row format + per-step latency + cache hit-rate)")
-    args = p.parse_args(argv)
+                        "row format + per-step latency + cache hit-rates)")
+    return p
 
+
+def main(argv=None):
+    args = build_argparser().parse_args(argv)
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
-    if cfg.objective != "clm":
-        raise SystemExit("serving requires a causal-LM arch")
 
     rng = np.random.default_rng(args.seed)
     key = jax.random.PRNGKey(args.seed)
     params, state = transformer.init(key, cfg)
-    stores = memstore.find_stores(params)
-    for _, store in stores:  # cache warmup before the first prefill
-        store.warm()
-        store.reset_stats()
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size,
-                     size=(args.batch, args.prompt_len)),
-        dtype=jnp.int32,
+
+    num_requests = (2 * args.batch if args.requests is None
+                    else args.requests)
+    trace = synthetic_trace(
+        rng, num_requests,
+        vocab_size=cfg.vocab_size,
+        max_prompt=args.prompt_len,
+        max_gen=args.gen,
+        rate=args.rate,
+        mixed=not args.fixed_len,
     )
-    max_len = args.prompt_len + args.gen
+    engine = ServeEngine(params, state, cfg, EngineConfig(
+        slots=args.batch,
+        max_len=args.prompt_len + args.gen,
+        mode=args.mode,
+    ))
+    report = engine.run(trace)
 
-    t0 = time.time()
-    batch = {"tokens": prompts}
-    if cfg.family == "encdec":
-        batch["encoder_embeds"] = jnp.asarray(rng.normal(
-            size=(args.batch, cfg.encoder_len, cfg.d_model)
-        ).astype(np.float32))
-    logits, cache = transformer.prefill(params, state, batch, cfg, max_len)
-    prefill_s = time.time() - t0
-    # decode hit-rate must not be diluted by prefill's cold misses
-    prefill_hit = (round(
-        float(np.mean([s.hit_rate() for _, s in stores])), 4
-    ) if stores else None)
-    for _, store in stores:
-        store.reset_stats()
-    if not args.json:
-        print(json.dumps({"prefill_sec": round(prefill_s, 3),
-                          "tokens": args.batch * args.prompt_len}))
-
-    step = jax.jit(
-        lambda tok, pos, cache: transformer.decode_step(
-            params, state, tok, pos, cache, cfg
-        ),
-    )
-    timer = fault.StepTimer()
-    step_ms: list[float] = []
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    out = [tok]
-    for i in range(args.gen - 1):
-        t0 = time.time()
-        logits_t, cache = step(tok, args.prompt_len + i, cache)
-        tok = jnp.argmax(logits_t, axis=-1).astype(jnp.int32)
-        jax.block_until_ready(tok)
-        dt = time.time() - t0
-        timer.record(dt)
-        step_ms.append(round(1e3 * dt, 3))
-        out.append(tok)
-        for _, store in stores:  # async fill overlaps the next step
-            store.prefetch_last()
-    gen = jnp.concatenate(out, axis=1)
-
-    cache_stats = None
-    if stores:
-        cache_stats = {
-            "hit_rate": round(
-                float(np.mean([s.hit_rate() for _, s in stores])), 4
-            ),
-            "prefill_hit_rate": prefill_hit,
-        }
-        for k in ("hits", "misses", "uncached", "fills", "evictions"):
-            cache_stats[k] = int(sum(s.stats[k] for _, s in stores))
-
-    decode_us = 1e6 * timer.median()
     if args.json:
-        rows = [
-            ["serve_prefill", round(1e6 * prefill_s, 3),
-             f"tokens={args.batch * args.prompt_len}"],
-            ["serve_decode_step", round(decode_us, 3),
-             f"hit={cache_stats['hit_rate']}" if cache_stats else "dense"],
-        ]
-        print(json.dumps({
-            "arch": cfg.name,
-            "rows": rows,
-            "per_step_ms": step_ms,
-            "decode_median_ms": round(1e3 * timer.median(), 2),
-            "cache": cache_stats,
-            "generated_shape": list(gen.shape),
-        }))
+        print(json.dumps(report.summary(cfg.name)))
     else:
         rec = {
-            "decode_median_ms": round(1e3 * timer.median(), 2),
-            "generated_shape": list(gen.shape),
-            "sample": np.asarray(gen[0, :8]).tolist(),
+            "mode": report.mode,
+            "requests": len(report.requests),
+            "generated_tokens": report.generated_tokens,
+            "tokens_per_sec": round(report.tokens_per_sec, 2),
+            "decode_p50_ms": round(report.p50_ms(), 3),
+            "decode_p99_ms": round(report.p99_ms(), 3),
         }
-        if cache_stats:
-            rec["cache_hit_rate"] = cache_stats["hit_rate"]
+        if report.cache:
+            rec["cache_hit_rate"] = report.cache["hit_rate"]
         print(json.dumps(rec))
-    return gen
+    return report
 
 
 if __name__ == "__main__":

@@ -14,8 +14,6 @@ which a relaunch resumes bit-exact from the latest valid checkpoint.
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import functools
 import json
 import time
 

@@ -14,7 +14,6 @@ All softmax math in float32 regardless of activation dtype.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -325,16 +324,24 @@ def attn_decode(
     v_cache: jax.Array,
     cross: bool = False,
 ):
-    """One decode step. x: (B, 1, d); caches (B, T, Kh, D); pos scalar int.
+    """One decode step. x: (B, 1, d); caches (B, T, Kh, D).
+
+    `pos` is the absolute token position: a scalar (whole batch in lockstep,
+    the classic fixed-batch serve loop) or an int32 vector (B,) with one
+    position per batch slot (continuous batching: every slot sits at its own
+    depth in its own sequence).
 
     Returns (y, new_k_cache, new_v_cache). For SWA the cache is a ring
     buffer of size `cfg.window`."""
     b = x.shape[0]
     t = k_cache.shape[1]
+    per_slot = jnp.ndim(pos) == 1
     if cfg.pos_scheme == "mrope":
-        positions = jnp.full((3, b, 1), pos, jnp.int32)
+        positions = (jnp.broadcast_to(pos[None, :, None], (3, b, 1))
+                     if per_slot else jnp.full((3, b, 1), pos, jnp.int32))
     else:
-        positions = jnp.full((b, 1), pos, jnp.int32)
+        positions = (pos[:, None].astype(jnp.int32) if per_slot
+                     else jnp.full((b, 1), pos, jnp.int32))
     q, k, v = _project_qkv(params, x, cfg, positions)
     # Pin the decode layout: (batch=data, ..., head_dim=model when kv_heads
     # can't split the axis).  Without this the partitioner "involuntarily
@@ -357,13 +364,28 @@ def attn_decode(
     else:
         ring = cfg.attention == "swa"
         slot = pos % t if ring else pos
-        new_k = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
-        new_v = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+        if per_slot:
+            # one scatter row per batch element: slot i writes at its own
+            # position (the write lands before the attend, so a stale row at
+            # the new position can never be read back)
+            slot = slot if ring else jnp.minimum(slot, t - 1)
+            new_k = k_cache.at[jnp.arange(b), slot].set(k[:, 0])
+            new_v = v_cache.at[jnp.arange(b), slot].set(v[:, 0])
+        else:
+            new_k = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k, slot, axis=1
+            )
+            new_v = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v, slot, axis=1
+            )
         new_k = context.constrain(new_k, *kv_spec)
         new_v = context.constrain(new_v, *kv_spec)
         n_valid = jnp.minimum(pos + 1, t)
         out = decode_attention(
-            q, new_k, new_v, jnp.full((b,), n_valid, jnp.int32), ring=ring
+            q, new_k, new_v,
+            n_valid.astype(jnp.int32) if per_slot
+            else jnp.full((b,), n_valid, jnp.int32),
+            ring=ring,
         )
     out = out.reshape(b, 1, -1)
     out = context.constrain(out, B, None, "model")

@@ -21,7 +21,6 @@ along the layer axis and threaded through the scan as xs/ys.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
@@ -537,7 +536,12 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
 
 def decode_step(params, state, tokens, pos, cache, cfg: ModelConfig,
                 batch_extras: Optional[dict] = None):
-    """One serving step: tokens (B, 1) at absolute position `pos` (scalar).
+    """One serving step: tokens (B, 1) at absolute position `pos`.
+
+    `pos` is a scalar (the classic lockstep batch) or an int32 vector (B,)
+    carrying one absolute position per batch slot — the continuous-batching
+    engine (repro.serving) drives every decode through the vector form, so
+    sequences at different depths share one fixed-shape compiled step.
 
     Returns (logits (B, 1, V), new_cache).  This is the function the
     `decode_*` / `long_*` dry-run cells lower.
@@ -545,9 +549,15 @@ def decode_step(params, state, tokens, pos, cache, cfg: ModelConfig,
     b = tokens.shape[0]
     x = jnp.take(params["embed"]["embedding"], tokens, axis=0)
     if cfg.pos_scheme == "learned":
-        x = x + jax.lax.dynamic_slice_in_dim(
-            params["pos_embed"], pos, 1, axis=0
-        )[None].astype(x.dtype)
+        if jnp.ndim(pos) == 1:
+            x = x + jnp.take(
+                params["pos_embed"],
+                jnp.minimum(pos, params["pos_embed"].shape[0] - 1), axis=0,
+            )[:, None].astype(x.dtype)
+        else:
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], pos, 1, axis=0
+            )[None].astype(x.dtype)
 
     new_cache: dict[str, Any] = {}
     for si, seg in enumerate(layer_plan(cfg)):
@@ -598,6 +608,52 @@ def decode_step(params, state, tokens, pos, cache, cfg: ModelConfig,
     else:
         logits = nn.dense(params["lm_head"], x)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Slotted KV-cache manager (continuous batching)
+# ---------------------------------------------------------------------------
+#
+# The decode cache built by `init_cache(cfg, B, max_len)` is *slotted*: the
+# batch axis is a pool of B fixed-shape slots, each holding one in-flight
+# sequence.  The continuous-batching engine (repro.serving) admits a new
+# request by prefilling it at batch=1 and splicing the resulting sub-cache
+# into a free slot, and retires a finished one by simply marking the slot
+# free — the next admission overwrites every cache position, so no explicit
+# clearing is needed.  Because segment kinds stack their caches differently
+# (scanned runs carry a leading layer axis, hybrid units two), the batch
+# axis is *derived* per leaf rather than assumed.
+
+def cache_batch_axes(cfg: ModelConfig, max_len: int):
+    """Pytree matching the cache with each leaf's batch-axis index.
+
+    Derived by diffing `cache_shapes` at two batch sizes — robust to any
+    segment layout (plain runs, hybrid units, memory layers) without
+    hard-coding per-family axis positions."""
+    one = cache_shapes(cfg, 1, max_len)
+    two = cache_shapes(cfg, 2, max_len)
+    is_leaf = lambda x: isinstance(x, tuple) and isinstance(x[0], tuple)
+
+    def axis(a, b):
+        for i, (da, db) in enumerate(zip(a[0], b[0])):
+            if da != db:
+                return i
+        raise ValueError(f"cache leaf {a[0]} has no batch axis")
+
+    return jax.tree.map(axis, one, two, is_leaf=is_leaf)
+
+
+def write_cache_slot(cache, sub_cache, slot, axes):
+    """Splice a batch=1 `sub_cache` (from a single-request prefill) into
+    batch slot `slot` of a slotted cache.  `axes` comes from
+    `cache_batch_axes`; `slot` may be traced (the engine jits this with the
+    big cache donated, so admission never copies the pool)."""
+    def upd(c, s, ax):
+        return jax.lax.dynamic_update_slice_in_dim(
+            c, s.astype(c.dtype), slot, axis=ax
+        )
+
+    return jax.tree.map(upd, cache, sub_cache, axes)
 
 
 def _fill_kv_cache(k_new, v_new, cfg: ModelConfig, t_cache: int, s: int):

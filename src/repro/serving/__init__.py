@@ -1,0 +1,37 @@
+"""Continuous-batching serve subsystem.
+
+Public surface:
+
+  * `Request`, `RequestQueue`, `synthetic_trace` — request/trace model
+    (arrival-time simulation + the real-entrypoint queue hook).
+  * `EngineConfig`, `ServeEngine`, `serve_requests` — the slot-pool engine:
+    fixed-shape decode slots, per-tick admit/retire without recompilation,
+    batch=1 bucketed prefill spliced into the slotted KV cache, tiered
+    memstore prefetch driven by the union of in-flight sequences.
+  * `EngineReport`, `FinishedRequest` — machine-readable results
+    (`EngineReport.summary()` is the `launch.serve --json` document;
+    `.rows()` is the benchmark-harness row format).
+
+`repro.launch.serve` is the CLI over this package; design narrative in
+docs/serving.md.
+"""
+
+from repro.serving.engine import (
+    EngineConfig,
+    EngineReport,
+    FinishedRequest,
+    ServeEngine,
+    serve_requests,
+)
+from repro.serving.requests import Request, RequestQueue, synthetic_trace
+
+__all__ = [
+    "EngineConfig",
+    "EngineReport",
+    "FinishedRequest",
+    "Request",
+    "RequestQueue",
+    "ServeEngine",
+    "serve_requests",
+    "synthetic_trace",
+]

@@ -10,6 +10,8 @@ fixture resolution).
 
 from __future__ import annotations
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st

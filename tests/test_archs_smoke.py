@@ -44,6 +44,7 @@ def make_batch(cfg: ModelConfig, b=2, s=16, rng_seed=0):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL)
 def test_forward_and_grad_step(arch):
     cfg = configs.get_smoke_config(arch)
@@ -71,6 +72,7 @@ def test_forward_and_grad_step(arch):
     ["yi-9b", "h2o-danube-3-4b", "zamba2-2.7b", "mixtral-8x7b",
      "mamba2-1.3b", "whisper-small", "qwen2-vl-72b", "qwen2-1.5b"],
 )
+@pytest.mark.slow
 def test_decode_matches_full_forward(arch):
     """Stepwise decode through the cache must reproduce the causal forward."""
     cfg = configs.get_smoke_config(arch)
@@ -189,6 +191,7 @@ def test_moe_param_counts_plausible():
     assert 11e9 < mix.active_param_count() < 15e9
 
 
+@pytest.mark.slow
 def test_lram_insertion_into_assigned_arch():
     cfg = configs.with_lram(configs.get_smoke_config("yi-9b"), 16)
     assert cfg.lram_layers and cfg.lram is not None

@@ -1,11 +1,8 @@
 """Attention-layer unit tests: RoPE/M-RoPE, masks, GQA, cache mechanics."""
 
-import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.models import attention, transformer

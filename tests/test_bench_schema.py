@@ -1,0 +1,157 @@
+"""Summary-document schema shared by the benchmark and serve emitters,
+and the benchmark-regression gate (tools/check_bench.py).
+
+Covers the satellite contract: `benchmarks.run --json` and
+`repro.launch.serve --json` emit the same summary-document schema
+(top-level `rows` of [name, us_per_call, derived] triples), and
+`check_bench` demonstrably fails when a tracked hot path is 2x slower
+than the committed baseline (threshold 1.3x).
+"""
+
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+from tests.conftest import REPO
+
+sys.path.insert(0, REPO)  # `import benchmarks` (namespace pkg at repo root)
+
+from benchmarks.run import validate_summary  # noqa: E402
+
+
+def _load_check_bench():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", os.path.join(REPO, "tools", "check_bench.py")
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ------------------------------------------------------------------- schema
+
+def test_validate_summary_accepts_the_shared_schema():
+    validate_summary({"rows": [["x", 1.5, "d"], ["y", 0, ""]],
+                      "extra": "ignored"})
+
+
+@pytest.mark.parametrize("doc", [
+    [],                                       # not an object
+    {},                                       # no rows
+    {"rows": []},                             # empty rows
+    {"rows": [["x", 1.5]]},                   # missing derived
+    {"rows": [["", 1.5, "d"]]},               # empty name
+    {"rows": [["x", -1.0, "d"]]},             # negative latency
+    {"rows": [["x", True, "d"]]},             # bool is not a latency
+    {"rows": [["x", float("nan"), "d"]]},     # non-finite
+    {"rows": [["x", float("inf"), "d"]]},     # json.dump would emit Infinity
+    {"rows": [["x", 1.5, 3]]},                # derived not a string
+])
+def test_validate_summary_rejects_malformed(doc):
+    with pytest.raises(ValueError):
+        validate_summary(doc)
+
+
+def test_benchmarks_run_json_emitter(capsys):
+    from benchmarks import run as bench_run
+
+    rc = bench_run.main(["table1", "--smoke", "--json"])
+    assert rc == 0
+    doc = json.loads(capsys.readouterr().out)
+    validate_summary(doc)
+    assert doc["smoke"] is True and doc["tables"] == ["table1"]
+    assert any(name.startswith("table1.") for name, _, _ in doc["rows"])
+
+
+@pytest.mark.slow
+def test_serve_json_emitter_shares_the_schema(capsys):
+    from repro.launch import serve
+
+    serve.main(["--arch", "lram-tiered", "--smoke", "--mode", "continuous",
+                "--batch", "2", "--prompt-len", "4", "--gen", "3", "--json"])
+    doc = json.loads(capsys.readouterr().out)
+    validate_summary(doc)           # same contract as benchmarks.run --json
+    assert doc["mode"] == "continuous"
+    assert {"p50_ms", "p99_ms", "tokens_per_sec", "per_step_ms",
+            "cache", "requests"} <= set(doc)
+    assert doc["cache"] is not None and "hit_rate" in doc["cache"]
+
+
+# -------------------------------------------------------------- check_bench
+
+BASE = {"rows": [["hot.gather", 100.0, ""], ["hot.decode", 50.0, ""],
+                 ["analytic.row", 0.0, "presence-only"]]}
+
+
+def test_check_bench_fails_on_synthetic_2x_regression(tmp_path):
+    cb = _load_check_bench()
+    cur = {"rows": [["hot.gather", 200.0, ""], ["hot.decode", 51.0, ""],
+                    ["analytic.row", 0.0, ""]]}
+    lines, failures = cb.compare(BASE, cur, threshold=1.3)
+    assert len(failures) == 1 and "hot.gather" in failures[0]
+    assert any("REGRESSED" in ln for ln in lines)
+    # end-to-end: exit code 1
+    base_p, cur_p = tmp_path / "base.json", tmp_path / "cur.json"
+    base_p.write_text(json.dumps(BASE))
+    cur_p.write_text(json.dumps(cur))
+    assert cb.main([str(cur_p), "--baseline", str(base_p)]) == 1
+
+
+def test_check_bench_passes_within_threshold(tmp_path):
+    cb = _load_check_bench()
+    cur = {"rows": [["hot.gather", 125.0, ""], ["hot.decode", 40.0, ""],
+                    ["analytic.row", 0.0, ""],
+                    ["brand.new", 9.0, "untracked rows never gate"]]}
+    lines, failures = cb.compare(BASE, cur, threshold=1.3)
+    assert failures == []
+    assert any("NEW (untracked)" in ln for ln in lines)
+    base_p, cur_p = tmp_path / "base.json", tmp_path / "cur.json"
+    base_p.write_text(json.dumps(BASE))
+    cur_p.write_text(json.dumps(cur))
+    assert cb.main([str(cur_p), "--baseline", str(base_p)]) == 0
+
+
+def test_check_bench_missing_tracked_row_fails():
+    cb = _load_check_bench()
+    cur = {"rows": [["hot.gather", 100.0, ""], ["analytic.row", 0.0, ""]]}
+    _, failures = cb.compare(BASE, cur, threshold=1.3)
+    assert failures and "hot.decode" in failures[0]
+
+
+def test_check_bench_calibration_absorbs_machine_speed_skew():
+    """A uniformly slower runner passes when calibrated on a reference
+    row; a row that regresses beyond the machine skew still fails."""
+    cb = _load_check_bench()
+    base = {"rows": [["ref.gather", 100.0, ""], ["hot.decode", 50.0, ""]]}
+    slower = {"rows": [["ref.gather", 200.0, ""], ["hot.decode", 100.0, ""]]}
+    _, failures = cb.compare(base, slower, threshold=1.3)
+    assert failures                         # absolute gate: 2x > 1.3x
+    _, failures = cb.compare(base, slower, threshold=1.3,
+                             calibrate="ref.gather")
+    assert failures == []                   # calibrated: uniform 2x absorbed
+    real_regression = {"rows": [["ref.gather", 200.0, ""],
+                                ["hot.decode", 300.0, ""]]}
+    _, failures = cb.compare(base, real_regression, threshold=1.3,
+                             calibrate="ref.gather")
+    assert failures and "hot.decode" in failures[0]   # 6x > 1.3x * 2
+    # a faster machine never tightens the gate below the absolute threshold
+    faster = {"rows": [["ref.gather", 50.0, ""], ["hot.decode", 60.0, ""]]}
+    _, failures = cb.compare(base, faster, threshold=1.3,
+                             calibrate="ref.gather")
+    assert failures == []                   # 1.2x <= 1.3x despite 0.5x ref
+    # missing calibration row is itself a failure
+    _, failures = cb.compare({"rows": [["hot.decode", 50.0, ""]]},
+                             faster, threshold=1.3, calibrate="ref.gather")
+    assert failures and "calibration" in failures[0]
+
+
+def test_check_bench_errored_module_fails():
+    cb = _load_check_bench()
+    cur = {"rows": [["hot.gather", 100.0, ""], ["hot.decode", 50.0, ""],
+                    ["analytic.row", 0.0, ""],
+                    ["table9.ERROR", 0.0, "ValueError: boom"]]}
+    _, failures = cb.compare(BASE, cur, threshold=1.3)
+    assert failures and "errored" in failures[0]

@@ -2,9 +2,10 @@
 lookup, pipeline parallelism, compressed collectives, sharded-vs-single
 train-step equivalence, elastic checkpoint reshape, fault monitor."""
 
+import pytest
+
 import textwrap
 
-import pytest
 
 from conftest import run_in_subprocess
 
@@ -46,6 +47,7 @@ def test_step_timer_outliers():
 # subprocess: 8 fake devices
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_sharded_lram_lookup_matches_reference():
     run_in_subprocess(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
@@ -79,6 +81,7 @@ def test_sharded_lram_lookup_matches_reference():
     """), devices=8)
 
 
+@pytest.mark.slow
 def test_pipeline_parallel_matches_sequential():
     run_in_subprocess(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
@@ -105,6 +108,7 @@ def test_pipeline_parallel_matches_sequential():
     """), devices=4)
 
 
+@pytest.mark.slow
 def test_compressed_psum_close_to_exact():
     run_in_subprocess(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
@@ -129,6 +133,7 @@ def test_compressed_psum_close_to_exact():
     """), devices=8)
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     run_in_subprocess(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
@@ -168,6 +173,7 @@ def test_sharded_train_step_matches_single_device():
     """), devices=8)
 
 
+@pytest.mark.slow
 def test_elastic_checkpoint_reshape():
     run_in_subprocess(textwrap.dedent("""
         import tempfile
@@ -198,6 +204,7 @@ def test_elastic_checkpoint_reshape():
     """), devices=8)
 
 
+@pytest.mark.slow
 def test_train_driver_failure_and_resume(tmp_path):
     """Kill the driver mid-run via injected failure; relaunch resumes from
     the checkpoint and finishes."""

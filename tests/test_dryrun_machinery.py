@@ -2,11 +2,14 @@
 configs): lower + compile + cost/memory/collective extraction must work for
 every mode (train / prefill / decode) and both mesh layouts."""
 
+import pytest
+
 import textwrap
 
 from conftest import run_in_subprocess
 
 
+@pytest.mark.slow
 def test_lower_compile_and_analyze_all_modes():
     run_in_subprocess(textwrap.dedent("""
         import dataclasses

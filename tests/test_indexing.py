@@ -27,6 +27,7 @@ def test_bad_wrap_lengths():
         indexing.TorusSpec((10,) * 8)  # not divisible by 4
 
 
+@pytest.mark.slow
 @settings(deadline=None, max_examples=50)
 @given(st.integers(0, 2**18 - 1))
 def test_roundtrip_random_indices(idx):

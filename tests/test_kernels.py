@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import indexing, lattice
+from repro.core import indexing
 from repro.kernels import e8_lookup, gather_interp, ops, ref
 
 SPEC = indexing.choose_torus(16)
@@ -36,6 +36,7 @@ def test_sort_network_tracks_permutation(rng):
         np.testing.assert_allclose(keys[:, b], np.abs(x[perm[:, b], b]))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("n_queries", [1, 5, 128, 200])
 @pytest.mark.parametrize("top_k", [8, 32])
 def test_query_kernel_matches_ref(rng, n_queries, top_k):
@@ -76,12 +77,14 @@ def test_gather_kernel_matches_ref(rng, dtype, m):
     )
 
 
+@pytest.mark.slow
 def test_query_kernel_batched_leading_dims(rng):
     q = rng.uniform(0, 8, size=(3, 4, 8)).astype(np.float32)
     idx, w = e8_lookup.lram_query_pallas(jnp.asarray(q), SPEC, interpret=True)
     assert idx.shape == (3, 4, 32) and w.shape == (3, 4, 32)
 
 
+@pytest.mark.slow
 def test_fused_lookup_grads_match_autodiff(rng):
     values = jnp.asarray(
         rng.normal(size=(SPEC.num_locations, 8)).astype(np.float32)
@@ -107,6 +110,7 @@ def test_fused_lookup_grads_match_autodiff(rng):
     )
 
 
+@pytest.mark.slow
 def test_fused_lookup_interpolation_property(rng):
     """phi(k) = v_k through the full Pallas path."""
     values = jnp.asarray(

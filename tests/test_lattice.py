@@ -73,6 +73,7 @@ def test_decode_fixed_points():
     np.testing.assert_array_equal(out, pts)
 
 
+@pytest.mark.slow
 @settings(deadline=None, max_examples=30)
 @given(st.lists(st.floats(-50, 50, width=32), min_size=8, max_size=8))
 def test_decode_within_covering_radius(coords):

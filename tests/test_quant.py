@@ -122,6 +122,7 @@ def test_quantized_layer_impls_agree(kind, impl):
     assert bool(jnp.isfinite(g_q).all())
 
 
+@pytest.mark.slow
 def test_quantized_sharded_lookup_matches_reference():
     """impl #4: the model-parallel shard_map lookup dequantizes shard-local
     rows and psums fp32 partials — same bound, jit + grad, 8 fake devices."""

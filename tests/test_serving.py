@@ -1,0 +1,312 @@
+"""Continuous-batching serve engine: admit/retire invariants, equivalence.
+
+Covers the repro.serving subsystem:
+
+  * trace / queue mechanics (arrival ordering, clock-gated readiness),
+  * admit/retire invariants under mixed prompt/generation lengths
+    (every request gets exactly its budget, slots are reused, budgets
+    that overflow the cache are truncated at the cache end),
+  * continuous-vs-static-vs-single-slot equivalence: identical request
+    sets must generate identical tokens and first-step logits whatever
+    the scheduling mode (scheduling may only change *when* work runs),
+  * equivalence against an unbatched scalar-position reference decode,
+  * slotted-cache plumbing (`cache_batch_axes`, `write_cache_slot`),
+  * tiered-memstore integration: per-request decode cache hit-rates.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import configs
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.serving import (
+    EngineConfig,
+    Request,
+    RequestQueue,
+    ServeEngine,
+    synthetic_trace,
+)
+
+TINY = ModelConfig(
+    name="tiny-serve",
+    family="dense",
+    num_layers=2,
+    d_model=32,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=64,
+    vocab_size=97,
+    objective="clm",
+    remat=False,
+)
+MAX_LEN = 12
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    return transformer.init(jax.random.PRNGKey(0), TINY)
+
+
+def _trace(n=6, seed=1, max_prompt=6, max_gen=5):
+    return synthetic_trace(
+        np.random.default_rng(seed), n,
+        vocab_size=TINY.vocab_size, max_prompt=max_prompt, max_gen=max_gen,
+        mixed=True,
+    )
+
+
+def _run(tiny_model, trace, *, slots=3, mode="continuous", max_len=MAX_LEN):
+    params, state = tiny_model
+    engine = ServeEngine(
+        params, state, TINY,
+        EngineConfig(slots=slots, max_len=max_len, mode=mode),
+    )
+    return engine.run(trace)
+
+
+# ---------------------------------------------------------------- trace/queue
+
+def test_synthetic_trace_shapes_and_arrivals():
+    rng = np.random.default_rng(0)
+    trace = synthetic_trace(rng, 32, vocab_size=50, max_prompt=7, max_gen=9,
+                            rate=100.0, mixed=True)
+    assert len(trace) == 32
+    arrivals = [r.arrival_s for r in trace]
+    assert arrivals == sorted(arrivals) and arrivals[-1] > 0
+    assert all(1 <= r.prompt_len <= 7 for r in trace)
+    assert all(1 <= r.max_new_tokens <= 9 for r in trace)
+    assert all(r.prompt.min() >= 0 and r.prompt.max() < 50 for r in trace)
+    fixed = synthetic_trace(rng, 4, vocab_size=50, max_prompt=7, max_gen=9,
+                            mixed=False)
+    assert all(r.prompt_len == 7 and r.max_new_tokens == 9 for r in fixed)
+    assert all(r.arrival_s == 0.0 for r in fixed)
+
+
+def test_request_queue_is_clock_gated_and_ordered():
+    reqs = [Request(id=i, prompt=np.array([1]), max_new_tokens=1,
+                    arrival_s=t) for i, t in enumerate([0.5, 0.0, 2.0])]
+    q = RequestQueue(reqs)
+    assert len(q) == 3
+    assert q.next_arrival() == 0.0
+    assert q.pop_ready(now=0.0).id == 1
+    assert q.pop_ready(now=0.0) is None          # id=0 arrives at 0.5
+    assert q.num_ready(now=1.0) == 1
+    assert q.pop_ready(now=1.0).id == 0
+    q.push(Request(id=9, prompt=np.array([1]), max_new_tokens=1,
+                   arrival_s=1.5))
+    assert q.pop_ready(now=3.0).id == 9          # 1.5 < 2.0: order kept
+    assert q.pop_ready(now=3.0).id == 2
+    assert q.next_arrival() is None
+
+
+# -------------------------------------------------------------- admit/retire
+
+def test_admit_retire_budgets_under_mixed_lengths(tiny_model):
+    trace = _trace(8, seed=2)
+    report = _run(tiny_model, trace, slots=3)
+    assert sorted(r.id for r in report.requests) == list(range(8))
+    by_id = {r.id: r for r in report.requests}
+    for req in trace:
+        fin = by_id[req.id]
+        # capacity: max_len - s decode writes + the prefill-emitted token
+        expect = min(req.max_new_tokens, MAX_LEN - req.prompt_len + 1)
+        assert len(fin.tokens) == expect, (req.id, fin.tokens)
+        # first token comes from prefill; each decode tick adds one
+        assert fin.decode_steps == expect - 1
+        assert all(0 <= t < TINY.vocab_size for t in fin.tokens)
+    assert report.generated_tokens == sum(
+        len(r.tokens) for r in report.requests
+    )
+    # 8 requests through 3 slots: slots were reused
+    assert len(report.prefill_s) == 8
+
+
+def test_budget_truncates_at_cache_end(tiny_model):
+    req = Request(id=0, prompt=np.arange(1, 9, dtype=np.int32),
+                  max_new_tokens=50)
+    report = _run(tiny_model, [req], slots=1)
+    assert len(report.requests[0].tokens) == MAX_LEN - 8 + 1
+
+
+def test_prompt_longer_than_cache_rejected(tiny_model):
+    req = Request(id=0, prompt=np.ones(MAX_LEN, np.int32), max_new_tokens=1)
+    with pytest.raises(ValueError, match="no room"):
+        _run(tiny_model, [req], slots=1)
+
+
+# -------------------------------------------------------------- equivalence
+
+def test_scheduling_modes_are_logit_equivalent(tiny_model):
+    """Continuous, static, and single-slot scheduling must produce the same
+    tokens and the same first-step logits for an identical request set."""
+    trace = _trace(6, seed=3)
+    ref = _run(tiny_model, trace, slots=3, mode="continuous")
+    for variant in (
+        _run(tiny_model, trace, slots=3, mode="static"),
+        _run(tiny_model, trace, slots=1, mode="continuous"),
+    ):
+        for a, b in zip(ref.requests, variant.requests):
+            assert a.id == b.id and a.tokens == b.tokens
+            np.testing.assert_allclose(
+                a.first_logits, b.first_logits, rtol=1e-5, atol=1e-5
+            )
+
+
+def test_engine_matches_unbatched_reference_decode(tiny_model):
+    """The slotted engine must reproduce a plain per-request prefill +
+    scalar-position decode loop (no padding, no slot pool)."""
+    params, state = tiny_model
+    trace = _trace(4, seed=4)
+    report = _run(tiny_model, trace, slots=2)
+    by_id = {r.id: r for r in report.requests}
+    for req in trace:
+        s = req.prompt_len
+        logits, cache = transformer.prefill(
+            params, state, {"tokens": req.prompt[None]}, TINY, MAX_LEN
+        )
+        tok = int(np.argmax(np.asarray(logits[0, s - 1])))
+        tokens = [tok]
+        np.testing.assert_allclose(
+            np.asarray(logits[0, s - 1]), by_id[req.id].first_logits,
+            rtol=1e-4, atol=1e-4,
+        )
+        budget = min(req.max_new_tokens, MAX_LEN - s + 1)
+        for i in range(budget - 1):
+            lg, cache = transformer.decode_step(
+                params, state, np.asarray([[tok]], np.int32), s + i,
+                cache, TINY,
+            )
+            tok = int(np.argmax(np.asarray(lg[0, -1])))
+            tokens.append(tok)
+        assert tokens == by_id[req.id].tokens, req.id
+
+
+# ------------------------------------------------------------ cache plumbing
+
+def test_cache_batch_axes_and_write_slot():
+    cfg = configs.get_smoke_config("lram-tiered")
+    axes = transformer.cache_batch_axes(cfg, 8)
+    # scanned runs stack layers ahead of batch; memory layers do not
+    assert axes["seg0"]["k"] == 1
+    assert axes["seg1"]["k"] == 0
+    cache = transformer.init_cache(cfg, 3, 8)
+    sub = jax.tree.map(
+        lambda a, ax: jnp_ones_like_slice(a, ax), cache, axes
+    )
+    spliced = transformer.write_cache_slot(cache, sub, 1, axes)
+    k = np.asarray(spliced["seg0"]["k"])
+    assert (k[:, 1] == 1).all() and (k[:, 0] == 0).all() and (k[:, 2] == 0).all()
+    mk = np.asarray(spliced["seg1"]["k"])
+    assert (mk[1] == 1).all() and (mk[0] == 0).all() and (mk[2] == 0).all()
+
+
+def jnp_ones_like_slice(a, ax):
+    shape = list(a.shape)
+    shape[ax] = 1
+    return np.ones(shape, a.dtype)
+
+
+@pytest.mark.slow
+def test_swa_engine_matches_unbatched_reference():
+    """Sliding-window archs keep the *last* window positions in a ring
+    buffer, so padded prefill is not maskable there either — the engine
+    must prefill SWA prompts at exact length and still match the
+    unbatched reference (prompts deliberately longer than the window)."""
+    cfg = configs.get_smoke_config("h2o-danube-3-4b")
+    assert cfg.attention == "swa"
+    params, state = transformer.init(jax.random.PRNGKey(0), cfg)
+    max_len = 2 * cfg.window
+    rng = np.random.default_rng(6)
+    trace = [
+        Request(
+            id=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                size=(int(sp),)).astype(np.int32),
+            max_new_tokens=5,
+        )
+        for i, sp in enumerate(rng.integers(cfg.window + 1, max_len - 5,
+                                            size=3))
+    ]
+    engine = ServeEngine(
+        params, state, cfg, EngineConfig(slots=2, max_len=max_len),
+    )
+    report = engine.run(trace)
+    by_id = {r.id: r for r in report.requests}
+    for req in trace:
+        s = req.prompt_len
+        logits, cache = transformer.prefill(
+            params, state, {"tokens": req.prompt[None]}, cfg, max_len
+        )
+        tok = int(np.argmax(np.asarray(logits[0, s - 1])))
+        tokens = [tok]
+        for i in range(min(req.max_new_tokens, max_len - s + 1) - 1):
+            lg, cache = transformer.decode_step(
+                params, state, np.asarray([[tok]], np.int32), s + i,
+                cache, cfg,
+            )
+            tok = int(np.argmax(np.asarray(lg[0, -1])))
+            tokens.append(tok)
+        assert tokens == by_id[req.id].tokens, req.id
+
+
+@pytest.mark.slow
+def test_ssm_engine_matches_unbatched_reference():
+    """Recurrent families prefill at exact prompt length (state integrates
+    every position, so padding is not maskable); the engine must still
+    match the unbatched reference decode."""
+    cfg = configs.get_smoke_config("mamba2-1.3b")
+    params, state = transformer.init(jax.random.PRNGKey(0), cfg)
+    max_len = 10
+    trace = synthetic_trace(
+        np.random.default_rng(5), 3,
+        vocab_size=cfg.vocab_size, max_prompt=5, max_gen=4, mixed=True,
+    )
+    engine = ServeEngine(
+        params, state, cfg, EngineConfig(slots=2, max_len=max_len),
+    )
+    report = engine.run(trace)
+    by_id = {r.id: r for r in report.requests}
+    for req in trace:
+        s = req.prompt_len
+        logits, cache = transformer.prefill(
+            params, state, {"tokens": req.prompt[None]}, cfg, max_len
+        )
+        tok = int(np.argmax(np.asarray(logits[0, s - 1])))
+        tokens = [tok]
+        for i in range(min(req.max_new_tokens, max_len - s + 1) - 1):
+            lg, cache = transformer.decode_step(
+                params, state, np.asarray([[tok]], np.int32), s + i,
+                cache, cfg,
+            )
+            tok = int(np.argmax(np.asarray(lg[0, -1])))
+            tokens.append(tok)
+        assert tokens == by_id[req.id].tokens, req.id
+
+
+# ---------------------------------------------------------- tiered memstore
+
+@pytest.mark.slow
+def test_tiered_per_request_hit_rates():
+    cfg = configs.get_smoke_config("lram-tiered")
+    params, state = transformer.init(jax.random.PRNGKey(0), cfg)
+    trace = synthetic_trace(
+        np.random.default_rng(0), 4,
+        vocab_size=cfg.vocab_size, max_prompt=4, max_gen=4, mixed=True,
+    )
+    engine = ServeEngine(
+        params, state, cfg, EngineConfig(slots=2, max_len=8),
+    )
+    report = engine.run(trace)
+    assert report.cache is not None
+    total = (report.cache["hits"] + report.cache["misses"]
+             + report.cache["uncached"])
+    assert total > 0 and 0.0 <= report.cache["hit_rate"] <= 1.0
+    for fin in report.requests:
+        assert fin.cache_hit_rate is not None
+        assert 0.0 <= fin.cache_hit_rate <= 1.0
+    # the summary document carries the per-request rates
+    doc = report.summary(cfg.name)
+    assert all("cache_hit_rate" in r for r in doc["requests"])

@@ -20,6 +20,7 @@ def test_output_ranges(rng):
     assert np.all(s > 0)
 
 
+@pytest.mark.slow
 @settings(deadline=None, max_examples=40)
 @given(
     st.lists(st.floats(-5, 5, width=32), min_size=16, max_size=16),

@@ -1,0 +1,135 @@
+"""Benchmark-regression gate: compare a fresh BENCH_*.json to the baseline.
+
+    python tools/check_bench.py BENCH_ci.json \
+        [--baseline benchmarks/baseline.json] [--threshold 1.3]
+
+Both files are benchmark summary documents (`benchmarks.run --json`
+schema; validated via `benchmarks.run.validate_summary`).  The baseline's
+rows define the *tracked hot paths*: for every tracked name the current
+run must (a) report the row at all and (b) not exceed
+``threshold x baseline_us`` (default 1.3x).  Rows with ``us_per_call == 0``
+are derived/analytic rows and are tracked for presence only.  Extra rows
+in the current run (new benchmarks that have no baseline yet) are listed
+but never fail the gate — they start being enforced once
+`benchmarks/baseline.json` is refreshed to include them.
+
+``--calibrate NAME`` absorbs machine-speed skew between the baseline
+recorder and the gating runner: the threshold is relaxed by
+``max(1, cur[NAME] / base[NAME])`` — if the reference row shows the
+runner is uniformly 2x slower, tracked rows only fail when they regress
+>1.3x *beyond* that.  A faster runner never tightens the gate.  The CI
+bench job calibrates on ``tiering_dense_reference`` (a pure device
+gather, no scheduling/caching behaviour of its own).
+
+Exit status: 0 = no regression, 1 = regression / missing row / bad input.
+CI wires this into the ``bench`` job (see .github/workflows/ci.yml); to
+refresh the baseline after an intentional perf change, re-run
+``python -m benchmarks.run <tables> --smoke --out benchmarks/baseline.json``
+on the reference machine and commit the result.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks.run import validate_summary  # noqa: E402
+
+
+def load_summary(path: str) -> dict:
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    validate_summary(doc)
+    return doc
+
+
+def compare(baseline: dict, current: dict, threshold: float,
+            calibrate: str | None = None):
+    """Returns (report_lines, failures). Pure — unit-testable."""
+    base_rows = {name: us for name, us, _ in baseline["rows"]
+                 if not name.endswith(".ERROR")}
+    cur_rows = {name: us for name, us, _ in current["rows"]
+                if not name.endswith(".ERROR")}
+    failures: list[str] = []
+    if calibrate is not None:
+        if base_rows.get(calibrate, 0) <= 0 or cur_rows.get(calibrate, 0) <= 0:
+            failures.append(
+                f"calibration row {calibrate!r} missing or zero in "
+                f"baseline/current"
+            )
+        else:
+            scale = max(1.0, cur_rows[calibrate] / base_rows[calibrate])
+            threshold *= scale
+    width = max((len(n) for n in base_rows), default=4)
+    lines = []
+    if calibrate is not None and not failures:
+        lines.append(f"calibrated on {calibrate}: effective threshold "
+                     f"{threshold:.2f}x")
+    lines.append(f"{'name':<{width}}  {'base_us':>12}  {'cur_us':>12}  "
+                 f"{'ratio':>7}  status")
+    for name in sorted(base_rows):
+        base_us = base_rows[name]
+        if name not in cur_rows:
+            failures.append(f"tracked row missing from current run: {name}")
+            lines.append(f"{name:<{width}}  {base_us:>12.3f}  "
+                         f"{'-':>12}  {'-':>7}  MISSING")
+            continue
+        cur_us = cur_rows[name]
+        if base_us <= 0:
+            lines.append(f"{name:<{width}}  {base_us:>12.3f}  "
+                         f"{cur_us:>12.3f}  {'-':>7}  PRESENT")
+            continue
+        ratio = cur_us / base_us
+        status = "OK" if ratio <= threshold else "REGRESSED"
+        if status == "REGRESSED":
+            failures.append(
+                f"{name}: {cur_us:.3f}us vs baseline {base_us:.3f}us "
+                f"({ratio:.2f}x > {threshold:g}x)"
+            )
+        lines.append(f"{name:<{width}}  {base_us:>12.3f}  "
+                     f"{cur_us:>12.3f}  {ratio:>6.2f}x  {status}")
+    for name in sorted(set(cur_rows) - set(base_rows)):
+        lines.append(f"{name:<{width}}  {'-':>12}  "
+                     f"{cur_rows[name]:>12.3f}  {'-':>7}  NEW (untracked)")
+    error_rows = [name for name, _, _ in current["rows"]
+                  if name.endswith(".ERROR")]
+    for name in error_rows:
+        failures.append(f"benchmark module errored: {name}")
+    return lines, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh summary (BENCH_*.json)")
+    ap.add_argument("--baseline",
+                    default=os.path.join(REPO, "benchmarks", "baseline.json"))
+    ap.add_argument("--threshold", type=float, default=1.3,
+                    help="max allowed cur/base latency ratio per tracked "
+                         "hot path (default 1.3)")
+    ap.add_argument("--calibrate", default=None, metavar="NAME",
+                    help="tracked row used to absorb machine-speed skew: "
+                         "threshold scales by max(1, cur/base) of this row")
+    args = ap.parse_args(argv)
+    try:
+        baseline = load_summary(args.baseline)
+        current = load_summary(args.current)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"check_bench: bad input: {e}", file=sys.stderr)
+        return 1
+    lines, failures = compare(baseline, current, args.threshold,
+                              calibrate=args.calibrate)
+    print("\n".join(lines))
+    for f in failures:
+        print(f"REGRESSION: {f}", file=sys.stderr)
+    print(f"check_bench: {'FAIL' if failures else 'OK'} "
+          f"({len(failures)} failure(s), threshold {args.threshold:g}x)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
