@@ -47,6 +47,7 @@ import jax
 import numpy as np
 
 from repro import quant
+from repro.core import lookup
 from repro.memstore import TieredValueStore
 
 _MANIFEST = "manifest.json"
@@ -57,7 +58,12 @@ def _mangle(path: str) -> str:
 
 
 def _is_store(x) -> bool:
-    return isinstance(x, TieredValueStore)
+    # every registered offloaded-store class (TieredValueStore,
+    # ShardedTieredStore, ...) exposes the same shard-streaming interface:
+    # num_shards/shard_rows/m, flush, shard_host, shard_scale_host,
+    # load_shard, load_dense.  The on-disk stream uses *global* shard ids,
+    # so tiered <-> sharded-tiered checkpoints restore into each other.
+    return lookup.is_store(x)
 
 
 def _tree_items(tree):

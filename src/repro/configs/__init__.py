@@ -4,9 +4,11 @@ Every module exposes `config()` (the exact published configuration) and
 `smoke_config()` (a reduced same-family config for CPU smoke tests).
 `get_config(name)` / `get_smoke_config(name)` dispatch by arch id; shapes
 live in repro.configs.shapes.  Beyond-paper archs: `lram-tiered`
-(host-offloaded value table) and `lram-tiered-q8` (the same with int8
-rows + per-row scales on both tiers); `with_lram(cfg)` inserts the
-paper's memory FFN into any registered arch.
+(host-offloaded value table), `lram-tiered-q8` (the same with int8
+rows + per-row scales on both tiers), and `lram-sharded-tiered`
+(row-range-sharded tiered memory: each model shard owns a host-offloaded
+range with its own hot cache); `with_lram(cfg)` inserts the paper's
+memory FFN into any registered arch.
 """
 
 from __future__ import annotations
@@ -41,7 +43,7 @@ PAPER_MODELS = (
 
 # beyond-paper configs: registered for get_config()/launchers, but kept out
 # of the per-arch smoke matrix (they have their own tier-1 coverage)
-EXTRA_MODELS = ("lram-tiered", "lram-tiered-q8")
+EXTRA_MODELS = ("lram-tiered", "lram-tiered-q8", "lram-sharded-tiered")
 
 _MODULES = {
     "yi-9b": "yi_9b",
@@ -61,6 +63,7 @@ _MODULES = {
     "lram-bert-large": "lram_bert",
     "lram-tiered": "lram_tiered",
     "lram-tiered-q8": "lram_tiered_q8",
+    "lram-sharded-tiered": "lram_sharded_tiered",
 }
 
 

@@ -1,0 +1,70 @@
+"""`lram-sharded-tiered`: row-range-sharded tiered memory.
+
+The composition the lookup-plan registry unlocked: the value table is
+split into `model_shards` contiguous row ranges (the model-parallel
+ownership layout of `repro.distributed.sharded_lram`), and each range is
+a host-offloaded tiered store with its own device hot cache
+(`repro.memstore`).  Capacity therefore scales with the *sum* of the
+owners' host memories — tables larger than any single host — while every
+lookup stays O(1): each range contributes a masked partial interpolation
+over only the rows it owns, joined by a partial-sum (the psum, when
+ranges live on separate hosts).
+
+Same model shape as `lram-tiered`; `interp_impl="sharded-tiered"` with
+`model_shards` row ranges.  Write-back training, shard-streaming
+checkpoints (byte-compatible with plain tiered checkpoints of the same
+layout), and serve-loop prefetch all ride the per-range stores.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import lram_tiered
+
+
+def _shard(cfg, ranges: int):
+    return dataclasses.replace(
+        cfg,
+        name="lram-sharded-tiered",
+        lram=dataclasses.replace(
+            cfg.lram, interp_impl="sharded-tiered", model_shards=ranges
+        ),
+    )
+
+
+def config():
+    # 2^20 rows over 4 ranges: 32 shards of 8192 rows per range, each
+    # range caching 8 slots (25% resident within its range)
+    base = lram_tiered.config()
+    return _shard(
+        dataclasses.replace(
+            base,
+            lram=dataclasses.replace(
+                base.lram,
+                tiered=dataclasses.replace(
+                    base.lram.tiered, cache_slots=8
+                ),
+            ),
+        ),
+        ranges=4,
+    )
+
+
+def smoke_config():
+    # 2^16 rows over 2 ranges of 16 shards (2048 rows each); 4 cache
+    # slots per range -> the table still exceeds the aggregate device
+    # budget, the regime the tiered tests require
+    base = lram_tiered.smoke_config()
+    return _shard(
+        dataclasses.replace(
+            base,
+            lram=dataclasses.replace(
+                base.lram,
+                tiered=dataclasses.replace(
+                    base.lram.tiered, cache_slots=4
+                ),
+            ),
+        ),
+        ranges=2,
+    )

@@ -8,9 +8,12 @@ Public surface (one module per concern):
   * `repro.core.indexing` — lattice point <-> flat table index bijection
     (`TorusSpec`, `choose_torus`, `encode_points`, `decode_index`)
   * `repro.core.lram`     — `LRAMConfig`, `lram_init`/`lram_apply`, the
-    memory-augmented FFN block, and the `interp_impl` dispatch across the
-    four lookup implementations (reference | pallas | tiered | sharded)
-    plus quantized tables (`table_quant`)
+    memory-augmented FFN block
+  * `repro.core.lookup`   — the lookup-backend registry: placement
+    (dense | tiered | sharded | sharded-tiered) × storage (fp32 | int8 |
+    fp8) × kernel (reference | pallas) resolved once into a `LookupPlan`
+    (table construction, gather+interp, capability flags); backends
+    self-register from kernels/, memstore/, and distributed/
   * `repro.core.pkm`      — Product-Key Memory baseline
 
 Data flow and backward-pass contracts: docs/architecture.md.

@@ -16,21 +16,18 @@ input-dependent-sparse: dL/dvalues has at most 32*h nonzero rows per token
 (autodiff of the gather produces exactly the scatter-add the paper's CUDA
 backward implements).
 
-Implementation selection: `interp_impl` swaps the pure-jnp reference path
-for the Pallas kernels (repro.kernels.ops), the model-sharded path
-(repro.distributed.sharded_lram), or the tiered host-offloaded table
-(repro.memstore — `interp_impl="tiered"`, see docs/memstore.md).  It can be
-a callable (legacy hook) or a string naming a built-in implementation; the
-string can also be baked into the config (`LRAMConfig.interp_impl`), which
-is how `lram_init` knows to build the value table as a `TieredValueStore`
-instead of a dense device array.
-
-Orthogonally, `LRAMConfig.table_quant` ("none" | "int8" | "fp8") stores the
-value table quantized with per-row fp32 scales (repro.quant): rows move in
-their 1-byte form through every lookup implementation and are dequantized
-at gather time, with the weighted sum still in fp32.  All four impls agree
-with the fp32 reference within `repro.quant.max_abs_error_bound`; the map
-of where the dequant sits in each path is docs/architecture.md.
+Implementation selection is a **plan** over three orthogonal axes
+(`repro.core.lookup`): placement (`LRAMConfig.interp_impl` — dense |
+tiered | sharded | sharded-tiered, with "reference"/"pallas" as dense
+aliases), storage (`LRAMConfig.table_quant` — fp32 | int8 | fp8 rows with
+per-row scales, `repro.quant`), and kernel (`LRAMConfig.lookup_kernel` —
+jnp reference or the Pallas scalar-prefetch kernels).  The plan is
+resolved once at `lram_init`/trace time; it builds the value table
+(`params["values"]` — a dense array, `QuantizedTable`,
+`TieredValueStore`, or `ShardedTieredStore`) and owns the gather+interp
+step with its autodiff contract.  `lram_apply`'s `interp_impl` argument
+overrides the config's placement per call (a string, or a legacy callable
+hook — deprecated, see `lookup.plan_from_callable`).
 """
 
 from __future__ import annotations
@@ -42,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import nn
-from repro.core import indexing, lattice, torus
+from repro.core import indexing, lattice, lookup, torus
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,9 +51,14 @@ class LRAMConfig:
     query_norm: str = "batch"  # batch | rms | none  (paper: batchnorm)
     value_init_scale: float = 0.02
     table_dtype: str = "float32"
-    interp_impl: str = "reference"  # reference | pallas | tiered
-    tiered: Any = None              # memstore.TieredSpec when interp_impl=tiered
-    table_quant: str = "none"       # none | int8 | fp8 (per-row fp32 scales)
+    # --- the lookup plan's three axes (repro.core.lookup) ---
+    interp_impl: str = "reference"  # placement: reference/pallas (dense) |
+    #                                 tiered | sharded | sharded-tiered
+    tiered: Any = None              # memstore.TieredSpec for tiered placements
+    table_quant: str = "none"       # storage: none | int8 | fp8
+    lookup_kernel: str = "auto"     # kernel: auto | reference | pallas
+    model_shards: int = 0           # sharded-tiered row-range owners
+    #                                 (0 = ambient mesh's model-axis size)
 
     def __post_init__(self):
         if self.table_quant not in ("none", "int8", "fp8"):
@@ -95,7 +97,7 @@ class LRAMConfig:
 
 
 # ---------------------------------------------------------------------------
-# Lookup primitives (reference path; kernels/ops.py provides Pallas variants)
+# Lookup primitives (reference path; the plan registry swaps the rest)
 # ---------------------------------------------------------------------------
 
 def indices_and_weights(
@@ -146,97 +148,25 @@ def gather_interp(values: jax.Array, idx: jax.Array, w: jax.Array) -> jax.Array:
 InterpFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
 
 
-def _run_interp(values, idx, w, cfg: "LRAMConfig", override) -> jax.Array:
-    """Dispatch the gather+interpolate step.
-
-    `override` (the lram_apply argument) wins over `cfg.interp_impl`; it may
-    be a callable (legacy hook) or one of "reference" | "pallas" | "tiered".
-    A TieredValueStore in params always takes the tiered path — a dense
-    gather cannot read a host-offloaded table.
-    """
-    impl = override if override is not None else cfg.interp_impl
-    from repro import memstore, quant  # deferred: keeps core importable
-
-    if isinstance(values, memstore.TieredValueStore):
-        if callable(impl):
-            raise ValueError(
-                "callable interp_impl hooks cannot read a tiered value "
-                "table (they expect a dense (N, m) array); drop the "
-                "override to use the tiered lookup"
-            )
-        return memstore.tiered_interp(values, idx, w)
-    if isinstance(values, quant.QuantizedTable):
-        # quantized dense table: rows move in their 1-byte form and are
-        # dequantized at gather time; the weighted sum stays fp32
-        if callable(impl):
-            # hooks that understand QuantizedTable (the sharded lookup)
-            # receive it as-is; legacy dense hooks would misread it
-            return impl(values, idx, w)
-        if impl in ("reference", "dense"):
-            return quant.gather_interp_quant(values, idx, w)
-        if impl == "pallas":
-            from repro.kernels import gather_interp as gi
-
-            return gi.gather_interp_quant(
-                values.q, values.scale, idx, w,
-                jax.default_backend() != "tpu",
-            )
-        raise ValueError(
-            f"interp_impl {impl!r} cannot read a QuantizedTable"
-        )
-    if callable(impl):
-        return impl(values, idx, w)
-    if impl == "tiered":
-        raise ValueError(
-            "interp_impl='tiered' needs params['values'] to be a "
-            "TieredValueStore — init the layer with "
-            "LRAMConfig(interp_impl='tiered')"
-        )
-    if impl in ("reference", "dense"):
-        return gather_interp(values, idx, w)
-    if impl == "pallas":
-        from repro.kernels import ops
-
-        return ops.make_interp_impl(cfg.torus_spec, cfg.top_k)(values, idx, w)
-    raise ValueError(f"unknown interp_impl {impl!r}")
-
-
 # ---------------------------------------------------------------------------
 # The layer
 # ---------------------------------------------------------------------------
 
 def lram_init(key, cfg: LRAMConfig, *, dtype=jnp.float32):
-    """Returns (params, state). State holds batchnorm running stats."""
+    """Returns (params, state). State holds batchnorm running stats.
+
+    The value table is built by the resolved lookup plan
+    (`repro.core.lookup`): every placement starts from the *same* RNG
+    draw, so a tiered/sharded/quantized layer is numerically identical to
+    its dense fp32 twin at init up to storage rounding."""
     kv, _ = jax.random.split(key)
+    plan = lookup.resolve(cfg)
     table_dtype = jnp.dtype(cfg.table_dtype)
-    values = nn.truncated_normal_init(cfg.value_init_scale)(
-        kv, (cfg.num_locations, cfg.m), table_dtype
+    values = plan.build_table(
+        nn.truncated_normal_init(cfg.value_init_scale)(
+            kv, (cfg.num_locations, cfg.m), table_dtype
+        )
     )
-    if cfg.interp_impl == "tiered":
-        # same RNG draw as the dense path, re-homed to host shards: a tiered
-        # layer is numerically identical to its dense twin at init
-        import dataclasses as _dc
-
-        import numpy as np
-
-        from repro import memstore
-
-        spec = cfg.tiered or memstore.TieredSpec()
-        if cfg.table_quant != "none" and spec.quant != cfg.table_quant:
-            if spec.quant != "none":
-                raise ValueError(
-                    f"LRAMConfig.table_quant={cfg.table_quant!r} conflicts "
-                    f"with TieredSpec.quant={spec.quant!r}"
-                )
-            spec = _dc.replace(spec, quant=cfg.table_quant)
-        values = memstore.TieredValueStore.from_dense(np.asarray(values), spec)
-    elif cfg.table_quant != "none":
-        # quantize the identical RNG draw: a quantized layer differs from
-        # its fp32 twin only by per-row rounding (bound: repro.quant.
-        # max_abs_error_bound), across every interp_impl
-        from repro import quant
-
-        values = quant.QuantizedTable.from_dense(values, cfg.table_quant)
     params: dict[str, Any] = {"values": values}
     state: dict[str, Any] = {}
     if cfg.query_norm == "batch":
@@ -262,9 +192,12 @@ def lram_apply(
 
     Args:
       x: (..., 2*8*heads) inputs.
-      interp_impl: optional override for the gather+interpolate step —
-        a callable hook (Pallas kernel / sharded lookup) or an impl name
-        ("reference" | "pallas" | "tiered"); defaults to cfg.interp_impl.
+      interp_impl: optional placement override for the gather+interpolate
+        step — an impl name ("reference" | "pallas" | "tiered" | "sharded"
+        | "sharded-tiered") or a legacy callable hook (deprecated);
+        defaults to cfg.interp_impl.  Resolution goes through
+        `repro.core.lookup.resolve`, which raises `LookupPlanError` for
+        unsupported cells.
       return_access: additionally return (indices, weights) — used by the
         memory-utilisation analysis (paper Table 5).
 
@@ -273,6 +206,7 @@ def lram_apply(
     """
     if x.shape[-1] != cfg.in_dim:
         raise ValueError(f"LRAM expects {cfg.in_dim} features, got {x.shape}")
+    plan = lookup.resolve(cfg, interp_impl)
     lead = x.shape[:-1]
     xh = x.reshape(*lead, cfg.heads, 2 * lattice.DIM)
     # heads ride the tensor-parallel axis (table shared/replicated): the
@@ -293,7 +227,7 @@ def lram_apply(
     spec = cfg.torus_spec
     q, scale = torus.torus_map(xh.astype(jnp.float32), spec.K)
     idx, w = indices_and_weights(q, spec, cfg.top_k)
-    out = _run_interp(params["values"], idx, w, cfg, interp_impl)
+    out = plan.interp(params["values"], idx, w)
     # (..., heads, m)
     out = out * scale
     y = out.reshape(*lead, cfg.out_dim).astype(x.dtype)
@@ -318,10 +252,15 @@ def memffn_config(width: int, log2_locations: int, **kw) -> LRAMConfig:
 def memffn_init(key, width: int, cfg: LRAMConfig, *, dtype=jnp.float32):
     if cfg.in_dim != width or cfg.out_dim != 4 * width:
         raise ValueError("cfg does not match the paper block shape")
+    # NOTE: earlier revisions reused k1 for both lram_init and wi (k2 was
+    # split but never consumed), correlating the memory table with the
+    # input projection.  Seeding wi from k2 decorrelates them — an
+    # intentional init-behaviour change: checkpoints are unaffected, but
+    # fresh inits of this block differ from pre-fix runs.
     k1, k2, k3 = jax.random.split(key, 3)
     lram_params, lram_state = lram_init(k1, cfg, dtype=dtype)
     params = {
-        "wi": nn.dense_init(k1, width, width, dtype=dtype),
+        "wi": nn.dense_init(k2, width, width, dtype=dtype),
         "lram": lram_params,
         "wo": nn.dense_init(k3, 4 * width, width, dtype=dtype),
     }

@@ -5,17 +5,20 @@ Public surface:
   * `repro.kernels.e8_lookup`     — query kernel: distance matmul over the
     232 candidates + unrolled top-k (`lram_query_pallas`)
   * `repro.kernels.gather_interp` — scalar-prefetch row gather + weighted
-    interpolation (`gather_interp_pallas`); fused-dequant variants for
-    quantized tables (`gather_interp_quant_pallas`, differentiable
-    `gather_interp_quant`)
+    interpolation (`gather_interp_pallas`, differentiable
+    `gather_interp_vjp`); fused-dequant variants for quantized tables
+    (`gather_interp_quant_pallas`, differentiable `gather_interp_quant`)
   * `repro.kernels.tiered_gather` — gather through the tiered store's
     shard->slot indirection (`tiered_gather_pallas`, quantized
     `tiered_gather_quant_pallas`, jnp references)
   * `repro.kernels.ops`           — `lram_lookup`: query + gather fused
-    behind one custom_vjp (sparse scatter-add backward), and
-    `make_interp_impl` hooks for `lram_apply`
+    behind one custom_vjp (sparse scatter-add backward), and the legacy
+    `make_interp_impl` callable hook (deprecated)
   * `repro.kernels.ref`           — jnp references for every kernel
 
-On CPU the kernels run in Pallas interpret mode; on TPU they JIT to
-Mosaic.  Placement in the overall system: docs/architecture.md.
+`gather_interp` and `ref` register the "pallas" / "reference" kernel
+cells of the lookup-plan registry, and `tiered_gather` the indirected
+cells (`repro.core.lookup` resolves them lazily).  On CPU the kernels
+run in Pallas interpret mode; on TPU they JIT to Mosaic.  Placement in
+the overall system: docs/architecture.md.
 """

@@ -25,6 +25,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import lookup
+
 
 def _kernel(idx_ref, w_ref, row_ref, out_ref):
     k = pl.program_id(1)
@@ -177,3 +179,63 @@ def _quant_bwd(interpret, res, g):
 
 
 gather_interp_quant.defvjp(_quant_fwd, _quant_bwd)
+
+
+# ---------------------------------------------------------------------------
+# differentiable fp32 wrapper (the "pallas" kernel cell of the plan matrix)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def gather_interp_vjp(values, idx, w, interpret=True):
+    """Differentiable wrapper for the fp32 Pallas gather.
+
+    Scalar-prefetch pallas_calls have no autodiff rule, so the backward is
+    supplied here with the same contract as `repro.kernels.ops.
+    lram_lookup`: d values is the paper's sparse scatter-add over the
+    touched rows, d w the gathered-row dot.  This is what lets the dense
+    and sharded placements run the Pallas kernel under `jax.grad`.
+    """
+    return gather_interp_pallas(values, idx, w, interpret=interpret)
+
+
+def _vjp_fwd(values, idx, w, interpret):
+    out = gather_interp_pallas(values, idx, w, interpret=interpret)
+    return out, (values, idx, w)
+
+
+def _vjp_bwd(interpret, res, g):
+    values, idx, w = res
+    g = g.astype(jnp.float32)
+    m = values.shape[-1]
+    flat_idx = idx.reshape(-1)
+    flat_wg = (w.astype(jnp.float32)[..., None]
+               * g[..., None, :]).reshape(-1, m)
+    dvalues = jnp.zeros(values.shape, jnp.float32).at[flat_idx].add(flat_wg)
+    rows = jnp.take(values, idx, axis=0).astype(jnp.float32)
+    dw = jnp.einsum("...m,...km->...k", g, rows)
+    return (
+        dvalues.astype(values.dtype),
+        np.zeros(idx.shape, dtype=jax.dtypes.float0),
+        dw.astype(w.dtype),
+    )
+
+
+gather_interp_vjp.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# the "pallas" kernel axis of the lookup-plan registry
+# (repro.core.lookup): interpret mode is chosen per backend at call time
+lookup.register_kernel(
+    "pallas", "fp32",
+    lambda values, idx, w: gather_interp_vjp(values, idx, w, _interpret()),
+)
+lookup.register_kernel(
+    "pallas", "quant",
+    lambda table, idx, w: gather_interp_quant(
+        table.q, table.scale, idx, w, _interpret()
+    ),
+)

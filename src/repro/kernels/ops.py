@@ -122,7 +122,12 @@ lram_lookup.defvjp(_lookup_fwd, _lookup_bwd)
 
 def make_interp_impl(spec: indexing.TorusSpec, top_k: int,
                      *, use_pallas: bool = True, interpret: bool = True):
-    """An `interp_impl` hook for repro.core.lram.lram_apply.
+    """A legacy callable `interp_impl` hook for repro.core.lram.lram_apply.
+
+    Deprecated: the plan registry (`repro.core.lookup`) resolves
+    `interp_impl="pallas"` to the same kernels with the sparse-backward
+    custom VJP attached; passing this hook goes through the callable
+    deprecation shim.  Kept for direct use outside lram_apply.
 
     Note: when plugged into lram_apply the query pipeline still runs in jnp
     (lram_apply computes idx/w itself); this hook swaps only the gather.

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import indexing, lattice, lram
+from repro.core import indexing, lattice, lookup, lram
 
 
 def lram_query_ref(
@@ -35,3 +35,15 @@ def lookup_ref(
 ) -> jax.Array:
     idx, w = lram_query_ref(q, spec, top_k)
     return gather_interp_ref(values, idx, w)
+
+
+def _gather_interp_quant_ref(table, idx, w):
+    from repro import quant
+
+    return quant.gather_interp_quant(table, idx, w)
+
+
+# the "reference" kernel axis of the lookup-plan registry: plain jnp
+# gathers for fp32 tables and QuantizedTables (repro.core.lookup)
+lookup.register_kernel("reference", "fp32", gather_interp_ref)
+lookup.register_kernel("reference", "quant", _gather_interp_quant_ref)

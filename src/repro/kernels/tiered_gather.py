@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import lookup
+
 
 def _kernel(idx_ref, slot_ref, w_ref, row_ref, out_ref):
     del idx_ref, slot_ref  # consumed by the index_map
@@ -199,3 +201,10 @@ def tiered_gather_quant_ref(
     rows = jnp.take(cache_flat, cache_rows, axis=0).astype(jnp.float32)
     ws = w.astype(jnp.float32) * jnp.take(scale_flat, cache_rows, axis=0)
     return jnp.einsum("...k,...km->...m", ws, rows)
+
+
+# the indirected cells of the lookup-plan kernel registry: the tiered
+# store's device-cache gather resolves these instead of importing this
+# module by name (repro.core.lookup / repro.memstore.store)
+lookup.register_kernel("pallas", "tiered", tiered_gather_pallas)
+lookup.register_kernel("pallas", "tiered-quant", tiered_gather_quant_pallas)

@@ -22,8 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import configs, data, memstore, optim
+from repro import configs, data, optim
 from repro.checkpoint import CheckpointManager
+from repro.core import lookup
 from repro.distributed import fault, sharding
 from repro.launch import mesh as mesh_lib
 from repro.models import transformer
@@ -118,9 +119,16 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(args.seed)
     params, model_state = transformer.init(key, cfg)
-    # tiered value tables own their sparse optimizer step (write-back SGD at
-    # the paper's memory LR); the dense Adam below never sees them
-    stores = memstore.find_stores(params)
+    # write-back-capable placements (tiered, sharded-tiered — discovered
+    # via the resolved lookup plan) own their sparse optimizer step
+    # (write-back SGD at the paper's memory LR); the dense Adam below
+    # never sees their tables
+    stores = (
+        lookup.find_stores(params)
+        if any(p.table_update == "writeback"
+               for p in lookup.model_plans(cfg))
+        else []
+    )
     for _, store in stores:
         store.writeback_lr = args.lr * args.memory_lr_mult
         store.warm()

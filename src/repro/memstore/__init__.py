@@ -9,8 +9,11 @@ tiers, shrinking capacity cost and fill traffic ~4x.  Design narrative in
 docs/memstore.md; lookup-path map in docs/architecture.md.
 
 Public surface: `TieredSpec` (static layout config), `TieredValueStore`
-(the store), `tiered_interp` (differentiable lookup hook), `find_stores`
-(locate stores in a pytree).
+(the store), `tiered_interp` (differentiable lookup entry point, also
+driving `repro.distributed.sharded_lram.ShardedTieredStore`), and
+`find_stores` (locate offloaded stores in a pytree — delegates to the
+`repro.core.lookup` store-type registry).  `repro.memstore.interp`
+registers the "tiered" placement with the lookup-plan registry.
 """
 
 from repro.memstore.store import (  # noqa: F401

@@ -1,4 +1,12 @@
-"""The `interp_impl="tiered"` hook: differentiable tiered lookup.
+"""The tiered placement backend: differentiable host-offloaded lookup.
+
+Registers the `"tiered"` placement with the lookup-plan registry
+(`repro.core.lookup`), so `interp_impl="tiered"` resolves to a plan whose
+table is a `TieredValueStore` and whose interp is `tiered_interp` below.
+The same entry point also drives the sharded-tiered placement
+(`repro.distributed.sharded_lram.ShardedTieredStore` routes the per-range
+cache walks behind the identical `gather` / `gather_rows_host` /
+`apply_writeback` surface).
 
 Two execution modes behind one entry point, `tiered_interp(store, idx, w)`:
 
@@ -32,12 +40,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import io_callback
 
+from repro.core import lookup
 from repro.memstore.store import TieredValueStore
 
 
-def tiered_interp(store: TieredValueStore, idx: jax.Array,
-                  w: jax.Array) -> jax.Array:
-    """sum_k w[..., k] * store[idx[..., k]] -> (..., m); differentiable."""
+def tiered_interp(store, idx: jax.Array, w: jax.Array) -> jax.Array:
+    """sum_k w[..., k] * store[idx[..., k]] -> (..., m); differentiable.
+
+    `store` is a TieredValueStore or any object with the same
+    gather / gather_rows_host / apply_writeback surface (the
+    sharded-tiered range store)."""
     if isinstance(idx, jax.core.Tracer) or isinstance(w, jax.core.Tracer):
         if store._traced_interp is None:
             store._traced_interp = _build_traced_interp(store)
@@ -45,7 +57,7 @@ def tiered_interp(store: TieredValueStore, idx: jax.Array,
     return store.gather(idx, w)
 
 
-def _build_traced_interp(store: TieredValueStore):
+def _build_traced_interp(store):
     m = store.m
 
     def _rows_cb(idx):
@@ -88,3 +100,39 @@ def _build_traced_interp(store: TieredValueStore):
 
     interp.defvjp(_fwd, _bwd)
     return interp
+
+
+# ---------------------------------------------------------------------------
+# the "tiered" placement backend (repro.core.lookup)
+# ---------------------------------------------------------------------------
+
+def _tiered_factory(cfg, storage: str, kernel: str) -> lookup.LookupPlan:
+    spec = lookup.merged_tiered_spec(cfg, storage, kernel)
+    if cfg.num_locations % spec.shard_rows:
+        raise lookup.LookupPlanError(
+            "tiered", storage, kernel,
+            f"num_locations={cfg.num_locations} not divisible by "
+            f"TieredSpec.shard_rows={spec.shard_rows}",
+        )
+
+    def build_table(dense):
+        return TieredValueStore.from_dense(np.asarray(dense), spec)
+
+    def interp(values, idx, w):
+        if not isinstance(values, TieredValueStore):
+            raise lookup.LookupPlanError(
+                "tiered", storage, kernel,
+                "params['values'] must be a TieredValueStore — init the "
+                "layer with LRAMConfig(interp_impl='tiered')",
+            )
+        return tiered_interp(values, idx, w)
+
+    return lookup.LookupPlan(
+        placement="tiered", storage=storage, kernel=kernel,
+        build_table=build_table, interp=interp,
+        supports_prefetch=True, table_update="writeback",
+        checkpoint_layout="shards",
+    )
+
+
+lookup.register_placement("tiered", _tiered_factory)

@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import quant
+from repro.core import lookup
 
 
 @dataclasses.dataclass(frozen=True)
@@ -254,20 +255,25 @@ class TieredValueStore:
             self._dev_stale.add(slot)
             self.stats["fills"] += 1
 
-    def _map(self, flat_idx: np.ndarray, *, count: bool = True):
+    def _map(self, flat_idx: np.ndarray, *, count: bool = True,
+             valid_elems: int | None = None):
         """(shard, row, slot, resident_mask) for flat global row ids,
-        servicing misses along the way."""
+        servicing misses along the way.  `valid_elems` limits the stat
+        counting to the leading prefix — callers that pad a batch to a
+        compile bucket (weight-0 duplicates) must not inflate
+        hits/misses/uncached with phantom accesses."""
         shard, row = self._split(flat_idx)
         resident_before = self._shard_slot[shard] >= 0
         self._ensure_resident(np.unique(shard))
         slot = self._shard_slot[shard]
         mask = slot >= 0
         if count:
+            v = slice(None) if valid_elems is None else slice(0, valid_elems)
             self.last_access = flat_idx  # feeds prefetch_last()
             self.stats["lookups"] += 1
-            self.stats["hits"] += int(resident_before.sum())
-            self.stats["misses"] += int((~resident_before & mask).sum())
-            self.stats["uncached"] += int((~mask).sum())
+            self.stats["hits"] += int(resident_before[v].sum())
+            self.stats["misses"] += int((~resident_before[v] & mask[v]).sum())
+            self.stats["uncached"] += int((~mask[v]).sum())
         return shard, row, slot.astype(np.int64), mask
 
     def prefetch(self, idx, *, sync_device: bool = True) -> None:
@@ -339,14 +345,15 @@ class TieredValueStore:
 
     # ------------------------------------------------------------- lookups
 
-    def gather(self, idx, w) -> jax.Array:
+    def gather(self, idx, w, *, valid_elems: int | None = None) -> jax.Array:
         """sum_k w[..., k] * values[idx[..., k]] -> (..., m), gathering from
         the device-resident cache (misses are filled first; rows of shards
-        that cannot fit are appended from the host tier)."""
+        that cannot fit are appended from the host tier).  `valid_elems`:
+        see `_map` — stat counting for bucket-padded batches."""
         idx_np = np.asarray(idx)
         lead, top_k = idx_np.shape[:-1], idx_np.shape[-1]
         flat = idx_np.reshape(-1)
-        shard, row, slot, mask = self._map(flat)
+        shard, row, slot, mask = self._map(flat, valid_elems=valid_elems)
         slot_rows = np.where(mask, slot * self.shard_rows + row, 0)
         quantized = self.quant != "none"
         cache_flat = self.cache_dev.reshape(-1, self.m)
@@ -373,17 +380,18 @@ class TieredValueStore:
         w_flat = jnp.asarray(w).reshape(-1, top_k).astype(jnp.float32)
         sr = jnp.asarray(slot_rows.reshape(-1, top_k).astype(np.int32))
         if self.spec.use_pallas and mask.all():
-            from repro.kernels import tiered_gather as tg
             interpret = jax.default_backend() != "tpu"
             idx_dev = jnp.asarray(flat.reshape(-1, top_k).astype(np.int32))
             slot_dev = jnp.asarray(self._shard_slot)
             if quantized:
-                out = tg.tiered_gather_quant_pallas(
+                kernel = lookup.kernel_gather("pallas", "tiered-quant")
+                out = kernel(
                     cache_flat, scale_flat, idx_dev, slot_dev, w_flat,
                     shard_rows=self.shard_rows, interpret=interpret,
                 )
             else:
-                out = tg.tiered_gather_pallas(
+                kernel = lookup.kernel_gather("pallas", "tiered")
+                out = kernel(
                     cache_flat, idx_dev, slot_dev, w_flat,
                     shard_rows=self.shard_rows, interpret=interpret,
                 )
@@ -635,19 +643,13 @@ jax.tree_util.register_pytree_node(
     lambda s: ((), s),
     lambda aux, children: aux,
 )
+lookup.register_store_type(TieredValueStore)
 
 
 def find_stores(tree) -> list[tuple[str, TieredValueStore]]:
-    """(path, store) for every distinct TieredValueStore in a pytree."""
-    flat, _ = jax.tree_util.tree_flatten_with_path(
-        tree, is_leaf=lambda x: isinstance(x, TieredValueStore)
-    )
-    out, seen = [], set()
-    for path, leaf in flat:
-        if isinstance(leaf, TieredValueStore) and id(leaf) not in seen:
-            seen.add(id(leaf))
-            name = "/".join(
-                str(getattr(p, "key", getattr(p, "idx", p))) for p in path
-            )
-            out.append((name, leaf))
-    return out
+    """(path, store) for every distinct offloaded store in a pytree.
+
+    Thin delegation to `repro.core.lookup.find_stores`, which walks the
+    registered store types (TieredValueStore here, ShardedTieredStore in
+    repro.distributed.sharded_lram)."""
+    return lookup.find_stores(tree)

@@ -28,9 +28,12 @@ Scheduling modes share this loop and differ only in admission policy:
     batch — the head-of-line blocking `benchmarks/table8_serving.py`
     quantifies.
 
-Tiered memory integration: every decode step covers the union of active
-sequences, so `TieredValueStore.prefetch_last()` after each tick prefetches
-exactly the shards that union touched; per-request cache hit-rates are
+Tiered memory integration: the engine asks the model's resolved lookup
+plan (`repro.core.lookup.model_plans`) whether the placement
+`supports_prefetch`; if so it collects the store handles (tiered or
+sharded-tiered) and calls `prefetch_last()` after each tick — every
+decode step covers the union of active sequences, so that prefetches
+exactly the shards the union touched.  Per-request cache hit-rates are
 attributed from per-tick stat deltas (shared-batch attribution: a tick's
 hits count toward every request in flight during it).
 """
@@ -45,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import memstore
+from repro.core import lookup
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.serving.requests import Request, RequestQueue
@@ -191,7 +194,14 @@ class ServeEngine:
             )
         self.params, self.state, self.cfg = params, state, cfg
         self.engine_cfg = engine_cfg
-        self.stores = memstore.find_stores(params)
+        # prefetch handles come from the lookup plan's capability flags
+        # (tiered and sharded-tiered placements), not from isinstance
+        # probing of params
+        self.stores = (
+            lookup.find_stores(params)
+            if any(p.supports_prefetch for p in lookup.model_plans(cfg))
+            else []
+        )
         self._axes = transformer.cache_batch_axes(cfg, engine_cfg.max_len)
         self.cache = transformer.init_cache(
             cfg, engine_cfg.slots, engine_cfg.max_len
