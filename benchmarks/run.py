@@ -27,7 +27,8 @@ import traceback
 
 MODULES = ("table1_lattice", "table2_lm", "table3_opcounts",
            "table4_timing", "table5_utilisation", "table6_tiering",
-           "table7_quant", "table8_serving", "table9_backends")
+           "table7_quant", "table8_serving", "table9_backends",
+           "table10_lifecycle")
 
 
 def validate_summary(doc) -> None:

@@ -6,6 +6,7 @@ Package layout (full walkthrough in docs/architecture.md):
   * `repro.quant`       — int8/fp8 value-table storage codec
   * `repro.kernels`     — Pallas TPU kernels + jnp references
   * `repro.memstore`    — tiered host/device value store
+  * `repro.memctl`      — memory lifecycle: telemetry, growth, migration
   * `repro.distributed` — sharded lookup, pipeline, collectives, fault
   * `repro.nn`          — minimal functional NN substrate
   * `repro.optim`       — Adam (10x memory LR) + gradient compression

@@ -3,8 +3,13 @@
 Public surface: `CheckpointManager` — atomic (tmp-dir + rename),
 checksummed (per-leaf / per-shard crc32), async for dense trees,
 shard-streaming for tiered value stores (quantized payload + scales when
-`TieredSpec.quant` is set), with newest-valid-first restore and elastic
-re-sharding.
+`TieredSpec.quant` is set), with newest-valid-first restore, elastic
+re-sharding, and grow-on-restore for memory tables (a smaller checkpoint
+warm-starts a larger table via the `repro.memctl` alias rule) — size
+mismatches the manager cannot reconcile raise `CheckpointError`.
 """
 
-from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointError,
+    CheckpointManager,
+)

@@ -76,6 +76,18 @@ def _tree_items(tree):
     return items
 
 
+class CheckpointError(ValueError):
+    """A checkpoint/target size mismatch the manager cannot reconcile —
+    e.g. restoring a larger table into a smaller one (shrink), or
+    incompatible shard geometry.  A *caller* error: raised through the
+    newest-first fallback instead of silently trying older checkpoints.
+
+    The reconcilable direction — a smaller checkpoint into a larger
+    table — restores via grow-on-restore: old shards stream in at their
+    ids, appended rows warm-start from their coarse-lattice parent
+    (`j mod old_N`, the inverse of `repro.memctl.grow`'s append rule)."""
+
+
 class _StructureMismatch(KeyError):
     """`like` asks for leaves the checkpoint does not have — a caller
     error, re-raised instead of triggering newest-first fallback."""
@@ -116,13 +128,24 @@ class _TieredLeaf:
     def load_into(self, store: TieredValueStore,
                   mutated: list | None = None) -> TieredValueStore:
         meta = self.meta
-        if (meta["num_shards"] != store.num_shards
-                or meta["shard_rows"] != store.shard_rows
-                or meta["m"] != store.m):
-            raise ValueError(
-                f"tiered layout mismatch: checkpoint has "
+        if meta["shard_rows"] != store.shard_rows or meta["m"] != store.m:
+            raise CheckpointError(
+                f"tiered shard geometry mismatch: checkpoint has "
                 f"{meta['num_shards']}x{meta['shard_rows']}x{meta['m']}, "
                 f"store is {store.num_shards}x{store.shard_rows}x{store.m}"
+            )
+        if meta["num_shards"] > store.num_shards:
+            raise CheckpointError(
+                f"cannot shrink: checkpoint has {meta['num_shards']} "
+                f"shards, store only {store.num_shards} — restore into a "
+                f"table of at least the checkpoint's size (or grow the "
+                f"store with repro.memctl first)"
+            )
+        if store.num_shards % meta["num_shards"]:
+            raise CheckpointError(
+                f"grow-on-restore needs the store's {store.num_shards} "
+                f"shards to be a multiple of the checkpoint's "
+                f"{meta['num_shards']}"
             )
         for i in range(meta["num_shards"]):
             # may raise: mark mutation first.  load_shard converts between
@@ -133,6 +156,12 @@ class _TieredLeaf:
             if mutated is not None and store not in mutated:
                 mutated.append(store)
             store.load_shard(i, arr, scale)
+            # grow-on-restore: appended shards alias their coarse-lattice
+            # parent shard (memctl.grow's append rule is j mod old_N, and
+            # shard_rows divides old_N, so parents align shard-for-shard)
+            for j in range(i + meta["num_shards"], store.num_shards,
+                           meta["num_shards"]):
+                store.load_shard(j, arr, scale)
         return store
 
     def materialize(self) -> np.ndarray:
@@ -314,7 +343,7 @@ class CheckpointManager:
             try:
                 data = self._load_dir(s)
                 return s, self._assemble(like, data, s, sharding, mutated)
-            except _StructureMismatch:
+            except (_StructureMismatch, CheckpointError):
                 raise  # `like` does not match the checkpoint: caller error
             except Exception:
                 continue
@@ -352,11 +381,19 @@ class CheckpointManager:
                     else:  # dense checkpoint -> tiered store
                         if mutated is not None and proto not in mutated:
                             mutated.append(proto)
-                        proto.load_dense(np.asarray(arr))
+                        # the proto IS a registered store: a memory table
+                        # regardless of its tree path
+                        proto.load_dense(_reconcile_rows(
+                            name, np.asarray(arr),
+                            (proto.num_rows, proto.m), is_table=True,
+                        ))
                 leaves.append(proto)
                 continue
             if isinstance(arr, _TieredLeaf):  # tiered checkpoint -> dense
                 arr = arr.materialize()
+            shape = getattr(proto, "shape", None)
+            if shape is not None and tuple(arr.shape) != tuple(shape):
+                arr = _reconcile_rows(name, np.asarray(arr), tuple(shape))
             want = getattr(proto, "dtype", None)
             if want is not None and str(arr.dtype) != str(want):
                 arr = arr.astype(want)
@@ -365,6 +402,56 @@ class CheckpointManager:
             else:
                 leaves.append(jax.numpy.asarray(arr))
         return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _is_lram_table_path(name: str) -> bool:
+    """Does this leaf path name an LRAM value table?  Matches
+    `…/lram/values` (and a QuantizedTable's `…/lram/values/<child>`) plus
+    the bare `values` of a layer-level param dict — NOT `pkm/values` or
+    other coincidental `values` leaves, whose rows carry no
+    lattice-parent structure to alias-grow by."""
+    parts = name.split("/")
+    if parts and parts[-1].isdigit():
+        parts = parts[:-1]
+    if parts[-1:] != ["values"]:
+        return False
+    return len(parts) == 1 or parts[-2] == "lram"
+
+
+def _reconcile_rows(name: str, arr: np.ndarray, want: tuple, *,
+                    is_table: bool | None = None) -> np.ndarray:
+    """Reconcile a checkpoint leaf against a differently-sized target.
+
+    Memory-table leaves (the fp32 table, a quantized payload, or its
+    per-row scales — all row-major over N) grow-on-restore by the alias
+    rule `j mod old_N` (tiling), matching `repro.memctl.grow`'s append: a
+    smaller checkpoint warm-starts a larger table.  Everything else —
+    shrinks, non-multiple sizes, non-table leaves — raises a clear
+    `CheckpointError` instead of handing back a silently mis-shaped leaf.
+    """
+    if tuple(arr.shape) == tuple(want):
+        return arr
+    if is_table is None:
+        is_table = _is_lram_table_path(name)
+    rows_compatible = (
+        is_table
+        and len(want) == arr.ndim
+        and tuple(arr.shape[1:]) == tuple(want[1:])
+    )
+    if rows_compatible and want[0] > arr.shape[0] \
+            and want[0] % arr.shape[0] == 0:
+        reps = (want[0] // arr.shape[0],) + (1,) * (arr.ndim - 1)
+        return np.tile(arr, reps)
+    if rows_compatible and want[0] < arr.shape[0]:
+        raise CheckpointError(
+            f"cannot shrink {name}: checkpoint has {arr.shape[0]} rows, "
+            f"target {want[0]} — restore into a table of at least the "
+            f"checkpoint's size"
+        )
+    raise CheckpointError(
+        f"shape mismatch for {name}: checkpoint {tuple(arr.shape)} vs "
+        f"target {tuple(want)}"
+    )
 
 
 def _is_single_sharding(s) -> bool:

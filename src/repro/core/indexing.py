@@ -77,6 +77,54 @@ def choose_torus(log2_locations: int) -> TorusSpec:
     return spec
 
 
+def grow_torus(spec: TorusSpec, factor: int) -> TorusSpec:
+    """The index-preserving enlargement of a torus: K_0 multiplied by
+    `factor` (a power of two), all other wrap lengths unchanged.
+
+    Why K_0: `encode_points` is a mixed-radix integer in (u_1..u_7, u_8, p)
+    whose radices are M_1..M_7 — M_0 appears in no digit weight.  Enlarging
+    K_0 therefore (a) keeps every lattice point of the old fundamental box
+    at its *exact* old flat index, and (b) assigns the new points indices
+    in [old_N, new_N).  That is what makes online capacity growth an
+    append: old table rows, host shards, and device-cache slots all stay
+    valid (`repro.memctl.growth`).  The cost is a torus that elongates
+    along one axis instead of staying near-cubic (`choose_torus`), i.e. a
+    slightly worse covering — the documented price of growing live instead
+    of re-initialising.
+    """
+    if factor < 2 or factor & (factor - 1):
+        raise ValueError(f"growth factor must be a power of two >= 2, "
+                         f"got {factor}")
+    return TorusSpec((spec.K[0] * factor,) + spec.K[1:])
+
+
+def growth_parents(old_spec: TorusSpec, new_spec: TorusSpec,
+                   lo: int, hi: int) -> np.ndarray:
+    """Old-table parent row for each new row id in [lo, hi).
+
+    A new row's lattice point, wrapped onto the *old* torus (mod old K),
+    lands on the old lattice point that served its queries before growth —
+    its nearest coarse-lattice parent.  Initialising the new row from that
+    parent makes pre-growth lookups reproduce exactly: the kernel weights
+    depend only on query/point geometry, and the gathered values are
+    bit-identical copies.
+
+    For `grow_torus` enlargements this reduces to ``j % old_N`` (the grown
+    table is an alias stack of the old one) — asserted in tests; computed
+    here from the lattice bijection so any compatible (old, new) pair
+    works.
+    """
+    for ko, kn in zip(old_spec.K, new_spec.K):
+        if kn % ko:
+            raise ValueError(
+                f"new wrap lengths {new_spec.K} must be componentwise "
+                f"multiples of old {old_spec.K}"
+            )
+    pts = decode_index(np.arange(lo, hi, dtype=np.int64), new_spec)
+    return np.asarray(encode_points(jnp.asarray(pts), old_spec),
+                      dtype=np.int64)
+
+
 def encode_points(x: jnp.ndarray, spec: TorusSpec) -> jnp.ndarray:
     """Map lattice points (..., 8) (any integer coords) to flat indices.
 

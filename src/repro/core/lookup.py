@@ -31,8 +31,18 @@ whatever cell a config names, so importing ``repro.core`` stays cheap.
 
 Unsupported cells raise :class:`LookupPlanError` **at resolve time** —
 misconfiguration fails while building the layer, not deep inside a jitted
-apply.  Legacy callable ``interp_impl`` hooks still work through
-:func:`plan_from_callable` (with a ``DeprecationWarning``).
+apply.  (The legacy callable ``interp_impl`` hook protocol is gone:
+callables bypass the plan's capability flags and cannot compose with
+tiering/quantization/growth — register a placement backend instead.)
+
+Beyond the gather itself, the plan carries the capabilities the rest of
+the system keys on: the serve engine reads ``supports_prefetch``, the
+trainer reads ``table_update``, the checkpoint manager reads
+``checkpoint_layout``, the GSPMD partitioner reads ``table_rows_axis``
+(`repro.distributed.sharding`), and the memory lifecycle manager
+(`repro.memctl`) reads ``supports_growth`` / ``row_stats`` /
+``build_empty`` for online capacity growth and live plan-to-plan
+migration.
 """
 
 from __future__ import annotations
@@ -40,7 +50,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import importlib
-import warnings
 from typing import Any, Callable
 
 PLACEMENTS = ("dense", "tiered", "sharded", "sharded-tiered")
@@ -93,6 +102,18 @@ class LookupPlan:
     * ``checkpoint_layout`` — ``dense`` (one array leaf) or ``shards``
       (streamed ``shard_NNNNNN.npy`` files, ``repro.checkpoint``).
     * ``requires_mesh`` — the interp shard_maps over the ambient mesh.
+    * ``supports_growth`` — `repro.memctl.grow` can enlarge this table
+      live (append-only K_0 torus growth; mesh-sharded dense tables
+      cannot grow without a relaunch).
+    * ``row_stats`` — the table tracks per-shard access counts
+      (`row_stats()` on the store), which `repro.memctl.telemetry`
+      aggregates into utilisation reports.
+    * ``table_rows_axis`` — the mesh axis the table's leading (row) axis
+      shards over (``None`` = replicate); `distributed.sharding` emits
+      the memory table's pspec from this instead of a path regex.
+    * ``build_empty`` — zero-filled table of this plan's layout (store
+      placements only): the migration target `repro.memctl.migrate`
+      streams shards into.
     """
 
     placement: str
@@ -104,6 +125,10 @@ class LookupPlan:
     table_update: str = "autodiff"   # autodiff | writeback | frozen
     checkpoint_layout: str = "dense"  # dense | shards
     requires_mesh: bool = False
+    supports_growth: bool = False
+    row_stats: bool = False
+    table_rows_axis: str | None = None
+    build_empty: Callable[[], Any] | None = None
 
     @property
     def cell(self) -> tuple[str, str, str]:
@@ -212,6 +237,34 @@ def find_stores(tree) -> list[tuple[str, Any]]:
     return out
 
 
+def is_memory_table(x) -> bool:
+    """A whole value-table object: a registered offloaded store or a
+    dense `QuantizedTable` (treated as one leaf, not its q/scale parts)."""
+    from repro.quant import QuantizedTable
+
+    return is_store(x) or isinstance(x, QuantizedTable)
+
+
+def map_memory_tables(tree, fn: Callable[[Any], Any]):
+    """Replace every `lram/values` table leaf of a model-sized pytree with
+    `fn(table)` — the shared walker behind `repro.memctl`'s growth and
+    migration.  Tables are visited whole (`is_memory_table`), so a
+    QuantizedTable maps as one object; works on params and on trees
+    mirroring them (optimizer moments)."""
+    import jax
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=is_memory_table
+    )
+    leaves = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        leaves.append(fn(leaf) if name.endswith("lram/values") else leaf)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 # ---------------------------------------------------------------------------
 # resolution
 # ---------------------------------------------------------------------------
@@ -220,16 +273,20 @@ def resolve(cfg, override=None) -> LookupPlan:
     """Resolve a config (plus an optional per-call override) into a plan.
 
     `override` is ``lram_apply``'s ``interp_impl`` argument: ``None``
-    (use ``cfg.interp_impl``), an impl name string, or a legacy callable
-    hook (deprecated — wrapped via :func:`plan_from_callable`).
+    (use ``cfg.interp_impl``) or an impl name string.
 
     Resolution happens once per (config, impl, ambient mesh) — the result
     is memoized, so ``lram_apply`` can call this on every trace without
     re-walking the registry.
     """
     impl = override if override is not None else cfg.interp_impl
-    if not isinstance(impl, str) and callable(impl):
-        return plan_from_callable(impl)
+    if not isinstance(impl, str):
+        raise LookupPlanError(
+            "custom", "?", "?",
+            "callable interp_impl hooks were removed — pass an impl name "
+            "(reference | pallas | tiered | sharded | sharded-tiered) or "
+            "register a placement backend via repro.core.lookup",
+        )
     from repro.distributed import context as _ctx
 
     return _resolve_cached(cfg, impl, _ctx.get_mesh())
@@ -294,35 +351,6 @@ def _resolve_kernel(cfg, placement: str, impl: str) -> str:
     return kernel
 
 
-def plan_from_callable(fn: Callable) -> LookupPlan:
-    """Wrap a legacy ``interp_impl`` hook ``(values, idx, w) -> out`` into
-    a plan.  Deprecated: hooks bypass the plan's capability flags and
-    cannot compose with tiering/quantization — register a placement
-    backend instead."""
-    warnings.warn(
-        "callable interp_impl hooks are deprecated; pass an impl name "
-        "(reference | pallas | tiered | sharded | sharded-tiered) or "
-        "register a placement backend via repro.core.lookup",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-    def interp(values, idx, w):
-        if is_store(values):
-            raise LookupPlanError(
-                "custom", "?", "?",
-                "callable interp_impl hooks cannot read a tiered value "
-                "table (they expect a dense (N, m) array); drop the "
-                "override to use the configured plan",
-            )
-        return fn(values, idx, w)
-
-    return LookupPlan(
-        placement="custom", storage="fp32", kernel="custom",
-        build_table=lambda dense: dense, interp=interp,
-    )
-
-
 def model_plans(model_cfg) -> list[LookupPlan]:
     """The resolved lookup plans a model config implies (one per distinct
     LRAM config; [] when the arch has no memory layer).  This is how the
@@ -367,6 +395,7 @@ def _dense_factory(cfg, storage: str, kernel: str) -> LookupPlan:
         return LookupPlan(
             placement="dense", storage=storage, kernel=kernel,
             build_table=lambda dense: dense, interp=interp,
+            supports_growth=True,
         )
 
     from repro import quant
@@ -393,6 +422,7 @@ def _dense_factory(cfg, storage: str, kernel: str) -> LookupPlan:
         # integer payloads are opaque to autodiff: a dense quantized table
         # is a frozen store (training goes through the tiered write-back)
         table_update="frozen",
+        supports_growth=True,
     )
 
 

@@ -26,14 +26,14 @@ resolved once at `lram_init`/trace time; it builds the value table
 (`params["values"]` — a dense array, `QuantizedTable`,
 `TieredValueStore`, or `ShardedTieredStore`) and owns the gather+interp
 step with its autodiff contract.  `lram_apply`'s `interp_impl` argument
-overrides the config's placement per call (a string, or a legacy callable
-hook — deprecated, see `lookup.plan_from_callable`).
+overrides the config's placement per call (an impl name string; the legacy
+callable-hook protocol was removed — register a placement backend instead).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +45,10 @@ from repro.core import indexing, lattice, lookup, torus
 @dataclasses.dataclass(frozen=True)
 class LRAMConfig:
     log2_locations: int = 18  # N = 2**18 == paper's LRAM-small
+    # explicit wrap lengths (indexing.TorusSpec) — set by memctl.grow:
+    # grown configs carry the index-preserving K_0-enlarged torus instead
+    # of the near-cubic choose_torus default.  None = choose_torus.
+    torus: Any = None
     m: int = 64               # value dim per head (paper: 64)
     heads: int = 32           # h; layer input dim = 16*h, output = m*h
     top_k: int = 32           # paper §2.6: top-32 carries >=99.5% of mass
@@ -65,9 +69,17 @@ class LRAMConfig:
             raise ValueError(
                 f"table_quant must be none|int8|fp8, got {self.table_quant!r}"
             )
+        if self.torus is not None \
+                and self.torus.num_locations != 2**self.log2_locations:
+            raise ValueError(
+                f"torus has {self.torus.num_locations} locations but "
+                f"log2_locations={self.log2_locations}"
+            )
 
     @property
     def torus_spec(self) -> indexing.TorusSpec:
+        if self.torus is not None:
+            return self.torus
         return indexing.choose_torus(self.log2_locations)
 
     @property
@@ -145,9 +157,6 @@ def gather_interp(values: jax.Array, idx: jax.Array, w: jax.Array) -> jax.Array:
     return jnp.einsum("...k,...km->...m", w, rows)
 
 
-InterpFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
-
-
 # ---------------------------------------------------------------------------
 # The layer
 # ---------------------------------------------------------------------------
@@ -185,7 +194,7 @@ def lram_apply(
     cfg: LRAMConfig,
     *,
     train: bool = False,
-    interp_impl: InterpFn | str | None = None,
+    interp_impl: str | None = None,
     return_access: bool = False,
 ):
     """Apply the memory layer.
@@ -194,10 +203,10 @@ def lram_apply(
       x: (..., 2*8*heads) inputs.
       interp_impl: optional placement override for the gather+interpolate
         step — an impl name ("reference" | "pallas" | "tiered" | "sharded"
-        | "sharded-tiered") or a legacy callable hook (deprecated);
-        defaults to cfg.interp_impl.  Resolution goes through
-        `repro.core.lookup.resolve`, which raises `LookupPlanError` for
-        unsupported cells.
+        | "sharded-tiered"); defaults to cfg.interp_impl.  Resolution goes
+        through `repro.core.lookup.resolve`, which raises
+        `LookupPlanError` for unsupported cells (callables included: the
+        legacy hook protocol was removed).
       return_access: additionally return (indices, weights) — used by the
         memory-utilisation analysis (paper Table 5).
 
@@ -274,7 +283,7 @@ def memffn_apply(
     cfg: LRAMConfig,
     *,
     train: bool = False,
-    interp_impl: InterpFn | str | None = None,
+    interp_impl: str | None = None,
 ):
     h = nn.dense(params["wi"], x)
     h, lram_state = lram_apply(

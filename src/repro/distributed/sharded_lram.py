@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+from concurrent.futures import ThreadPoolExecutor
 from typing import Iterable
 
 import jax
@@ -202,6 +203,7 @@ class ShardedTieredStore:
         self._shards_per_range = self.parts[0].num_shards
         self.num_shards = num_ranges * self._shards_per_range
         self._traced_interp = None  # built lazily by repro.memstore.interp
+        self._pool: ThreadPoolExecutor | None = None  # prefetch executor
 
     @staticmethod
     def _part_spec(spec: TieredSpec, r: int) -> TieredSpec:
@@ -302,15 +304,44 @@ class ShardedTieredStore:
             part.apply_writeback(local, upd[sel])
 
     # -------------------------------------------------- cache management
+    # Range fills overlap each other through a small thread pool: each
+    # range owns disjoint state (its own host shards, cache mirror, LRU),
+    # so per-range prefetches are embarrassingly parallel — the serve
+    # thread no longer serialises R host-memcpy walks.  Stat counting is
+    # unchanged: prefetch never touches hit/miss counters, and fills are
+    # counted inside each part exactly as on the serial path.
+
+    def _executor(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=min(8, self.num_ranges),
+                thread_name_prefix="memstore-prefetch",
+            )
+        return self._pool
+
+    def _fanout(self, calls) -> None:
+        """Run (fn, kwargs) pairs, overlapped when there is more than one."""
+        calls = list(calls)
+        if len(calls) <= 1:
+            for fn, kw in calls:
+                fn(**kw)
+            return
+        futs = [self._executor().submit(fn, **kw) for fn, kw in calls]
+        for f in futs:
+            f.result()
 
     def prefetch(self, idx, *, sync_device: bool = True) -> None:
         flat = np.asarray(idx).reshape(-1)
-        for part, sel, local in self._route(flat):
-            part.prefetch(local, sync_device=sync_device)
+        self._fanout(
+            (part.prefetch, dict(idx=local, sync_device=sync_device))
+            for part, sel, local in self._route(flat)
+        )
 
     def prefetch_last(self, *, sync_device: bool = False) -> None:
-        for part in self.parts:
-            part.prefetch_last(sync_device=sync_device)
+        self._fanout(
+            (part.prefetch_last, dict(sync_device=sync_device))
+            for part in self.parts
+        )
 
     def warm(self, shards: Iterable[int] | None = None) -> None:
         if shards is None:
@@ -343,6 +374,83 @@ class ShardedTieredStore:
         s = self.stats
         total = s["hits"] + s["misses"] + s["uncached"]
         return s["hits"] / total if total else 0.0
+
+    def row_stats(self) -> tuple[np.ndarray, int]:
+        """(per-shard access counts in global shard order, rows per shard):
+        ranges are row-contiguous, so concatenating per-part counters IS
+        the global shard axis (the checkpoint stream's shard order)."""
+        return (np.concatenate([p.shard_access for p in self.parts]),
+                self.shard_rows)
+
+    # ------------------------------------------------------------- lifecycle
+
+    def _read_rows_raw(self, rows: np.ndarray):
+        """(payload, scales|None) for global row ids in storage form —
+        routed to the owning ranges; see TieredValueStore._read_rows_raw."""
+        flat = np.asarray(rows, np.int64).reshape(-1)
+        if flat.size and (flat.min() < 0 or flat.max() >= self.num_rows):
+            # an unrouted id would leave np.empty rows uninitialized
+            raise ValueError("row ids must index the table")
+        payload = np.empty((flat.size, self.m),
+                           self.parts[0].storage_dtype
+                           if self.quant != "none" else self.parts[0].dtype)
+        scales = (np.empty(flat.size, np.float32)
+                  if self.quant != "none" else None)
+        for part, sel, local in self._route(flat):
+            p, s = part._read_rows_raw(local)
+            payload[sel] = p
+            if scales is not None:
+                scales[sel] = s
+        return payload, scales
+
+    def grow_rows(self, new_num_rows: int, parents: np.ndarray) -> None:
+        """Append rows [num_rows, new_num_rows) as *new ranges* — in place.
+
+        Existing ranges keep their row spans, host shards, and device
+        caches untouched (the same append-only property as
+        `TieredValueStore.grow_rows`); each appended range is a fresh
+        tiered store of `rows_local` rows whose host tier is filled from
+        the parent rows, inheriting the live `writeback_lr`.  Global shard
+        ids extend contiguously, so grown checkpoints stay
+        byte-compatible with plain tiered stores of the same layout.
+        """
+        delta = new_num_rows - self.num_rows
+        if delta <= 0 or delta % self.rows_local:
+            raise ValueError(
+                f"new_num_rows={new_num_rows} must exceed {self.num_rows} "
+                f"by a multiple of the range size {self.rows_local}"
+            )
+        parents = np.asarray(parents, np.int64).reshape(-1)
+        if parents.size != delta:
+            raise ValueError(f"need {delta} parent rows, got {parents.size}")
+        if parents.size and (parents.min() < 0
+                             or parents.max() >= self.num_rows):
+            raise ValueError("parent row ids must index the old table")
+        payload, scales = self._read_rows_raw(parents)
+        lr = self.writeback_lr
+        for k in range(delta // self.rows_local):
+            r = self.num_ranges + k
+            part = TieredValueStore(
+                self.rows_local, self.m, self._part_spec(self.spec, r),
+                dtype=self.dtype,
+            )
+            lo = k * self.rows_local
+            pay3 = payload[lo:lo + self.rows_local].reshape(
+                part.num_shards, part.shard_rows, self.m
+            )
+            part._host[...] = pay3
+            if self.quant != "none":
+                part._host_scale[...] = scales[
+                    lo:lo + self.rows_local
+                ].reshape(part.num_shards, part.shard_rows)
+            part.writeback_lr = lr
+            self.parts.append(part)
+        self.num_rows = new_num_rows
+        self.num_ranges = len(self.parts)
+        self.num_shards = self.num_ranges * self._shards_per_range
+        if self._pool is not None:  # resize the executor to the new fanout
+            self._pool.shutdown(wait=False)
+            self._pool = None
 
     def bytes_per_entry(self) -> int:
         return self.parts[0].bytes_per_entry()
@@ -439,6 +547,10 @@ def _sharded_factory(cfg, storage: str, kernel: str) -> lookup.LookupPlan:
         return lookup.LookupPlan(
             placement="sharded", storage=storage, kernel=kernel,
             build_table=build_table, interp=interp, requires_mesh=True,
+            # growing a mesh-sharded dense table means resharding live
+            # device buffers — a relaunch (or a migration to
+            # sharded-tiered) is the supported path
+            supports_growth=False, table_rows_axis=AXIS,
         )
 
     def build_table_q(dense):
@@ -456,6 +568,7 @@ def _sharded_factory(cfg, storage: str, kernel: str) -> lookup.LookupPlan:
         placement="sharded", storage=storage, kernel=kernel,
         build_table=build_table_q, interp=interp_q,
         table_update="frozen", requires_mesh=True,
+        supports_growth=False, table_rows_axis=AXIS,
     )
 
 
@@ -501,6 +614,10 @@ def _sharded_tiered_factory(cfg, storage: str,
         build_table=build_table, interp=interp,
         supports_prefetch=True, table_update="writeback",
         checkpoint_layout="shards",
+        supports_growth=True, row_stats=True,
+        build_empty=lambda: ShardedTieredStore(
+            cfg.num_locations, cfg.m, spec, num_ranges
+        ),
     )
 
 

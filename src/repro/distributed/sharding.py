@@ -68,14 +68,12 @@ def _rules(ax: MeshAxes) -> list[tuple[str, tuple]]:
         (r"mamba/conv$", (None, T)),
         (r"mamba/(A_log|D|dt_bias)$", (None,)),
         (r"mamba/norm/scale$", (T,)),
-        # LRAM memory tables: REPLICATED + heads sharded on TP for tables
-        # that fit a chip (<= ~2^26 slots): the lookup is then fully local
-        # and the memffn has exactly a TP-FFN's collective shape (one psum)
-        # — the O(1)-in-N promise at pod scale (EXPERIMENTS.md §Perf cell 3).
-        # Row-sharding (repro.distributed.sharded_lram) remains the
-        # billions-of-slots path.
-        (r"memffn/lram/values$", (None, None)),
-        (r"lram/values$", (None, None)),
+        # LRAM memory tables carry NO rule here: the resolved LookupPlan
+        # emits their placement directly (`table_rows_axis` —
+        # `_memory_table_spec` below).  Dense plans replicate the table +
+        # shard heads on TP, exactly a TP-FFN's collective shape
+        # (EXPERIMENTS.md §Perf cell 3); the sharded plan rows-shards it
+        # over `model`; tiered plans keep it host-side (leafless).
         (r"pkm/values$", (T, None)),
         (r"pkm/subkeys[12]$", (None, T, None)),
         (r"pkm/query/kernel$", (F, T)),
@@ -122,21 +120,52 @@ def _spec_for(name: str, ndim: int, shape, mesh: Mesh,
     return P()
 
 
+def _memory_table_spec(plan, ndim: int, shape, mesh: Mesh) -> P:
+    """The LRAM value table's pspec, emitted by its resolved LookupPlan:
+    `table_rows_axis` names the mesh axis the leading (row) axis shards
+    over (None = replicate).  Applies uniformly to every table leaf — the
+    fp32 array (N, m), a QuantizedTable's payload (N, m), and its per-row
+    scales (N,) — since all of them are row-major over the same N."""
+    axis = plan.table_rows_axis
+    if axis is None or axis not in mesh.axis_names:
+        return P()
+    spec, _ = _apply_spec(
+        (axis,) + (None,) * (ndim - 1), ndim, shape, mesh
+    )
+    return spec
+
+
 def param_pspecs(params, mesh: Mesh,
-                 ax: Optional[MeshAxes] = None):
-    """Pytree of PartitionSpec mirroring `params`."""
+                 ax: Optional[MeshAxes] = None, *, model_cfg=None):
+    """Pytree of PartitionSpec mirroring `params`.
+
+    `model_cfg` (a ModelConfig) lets the resolved lookup plan place the
+    memory tables (`lram/values` leaves) instead of a path-regex rule —
+    required for row-sharded tables (`interp_impl="sharded"`), harmless
+    otherwise (dense plans replicate, matching the regex-era default)."""
     ax = ax or MeshAxes.for_mesh(mesh)
+    mem_plan = None
+    if model_cfg is not None:
+        from repro.core import lookup
+
+        plans = lookup.model_plans(model_cfg)
+        mem_plan = plans[0] if plans else None
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     specs = []
     for path, leaf in flat:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                         for p in path)
+        if mem_plan is not None and "lram/values" in name:
+            specs.append(
+                _memory_table_spec(mem_plan, leaf.ndim, leaf.shape, mesh)
+            )
+            continue
         specs.append(_spec_for(name, leaf.ndim, leaf.shape, mesh, ax))
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
-def shard_params(params, mesh: Mesh):
-    specs = param_pspecs(params, mesh)
+def shard_params(params, mesh: Mesh, *, model_cfg=None):
+    specs = param_pspecs(params, mesh, model_cfg=model_cfg)
     return jax.tree.map(
         lambda p, s: jax.device_put(p, NamedSharding(mesh, s)), params, specs
     )

@@ -71,7 +71,7 @@ def build_lowerable(cfg, shape_name: str, mesh):
     params_sh, state_sh = jax.eval_shape(
         lambda: transformer.init(jax.random.PRNGKey(0), cfg)
     )
-    pspecs = sharding.param_pspecs(params_sh, mesh)
+    pspecs = sharding.param_pspecs(params_sh, mesh, model_cfg=cfg)
     params_in = _sds(params_sh, mesh, pspecs)
     state_in = _replicated(state_sh, mesh)
     bspec = sharding.batch_pspec(mesh)

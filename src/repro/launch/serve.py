@@ -20,6 +20,13 @@ first prefill, each step's lattice accesses prefetch the next step's
 shards for the union of in-flight sequences, and per-request decode cache
 hit-rates ride the report.
 
+Lifecycle (`repro.memctl`, docs/lifecycle.md): `--ckpt-dir` restores a
+trained checkpoint, `--grow-to LOG2` pre-grows the table so checkpoints
+taken after a `--grow-at` training run restore cleanly, `--placement`
+overrides the lookup placement, and `--hbm-budget-mb` / `--spill-at-tick`
+attach a MemoryController that migrates a dense table to the tiered store
+live, between decode ticks, without dropping in-flight requests.
+
 `--json` emits one machine-readable summary document whose `rows` mirror
 the benchmark harness columns (name, us_per_call, derived — the schema
 `benchmarks/run.py --json` shares; see `benchmarks.run.validate_summary`),
@@ -29,12 +36,14 @@ plus per-step latencies, p50/p99, tokens/sec, and per-request records.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 
 import jax
 import numpy as np
 
-from repro import configs
+from repro import configs, memctl
+from repro.checkpoint import CheckpointManager
 from repro.models import transformer
 from repro.serving import EngineConfig, ServeEngine, synthetic_trace
 
@@ -59,6 +68,27 @@ def build_argparser() -> argparse.ArgumentParser:
                    help="pin every request to (--prompt-len, --gen) instead "
                         "of the mixed-length trace")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--placement", default="",
+                   choices=["", "reference", "pallas", "tiered", "sharded",
+                            "sharded-tiered"],
+                   help="override the memory arch's lookup placement "
+                        "(LRAMConfig.interp_impl) — e.g. serve lram-tiered "
+                        "dense with --placement reference to demo the "
+                        "HBM-budget spill")
+    p.add_argument("--ckpt-dir", default="",
+                   help="restore params from this checkpoint dir before "
+                        "serving (e.g. one written by repro.launch.train)")
+    p.add_argument("--grow-to", type=int, default=0, metavar="LOG2",
+                   help="grow the memory table to 2^LOG2 locations before "
+                        "restoring — serve a checkpoint taken after a "
+                        "--grow-at training run")
+    p.add_argument("--hbm-budget-mb", type=float, default=0.0,
+                   help="spill a dense memory table to the tiered store "
+                        "when its size exceeds this budget (live, between "
+                        "decode ticks; repro.memctl)")
+    p.add_argument("--spill-at-tick", type=int, default=-1,
+                   help="deterministically spill dense->tiered at this "
+                        "decode tick (demo/testing trigger)")
     p.add_argument("--json", action="store_true",
                    help="emit a machine-readable summary (benchmark-harness "
                         "row format + per-step latency + cache hit-rates)")
@@ -70,9 +100,37 @@ def main(argv=None):
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
 
+    if args.placement:
+        if cfg.lram is None:
+            raise SystemExit(f"--placement needs a memory arch; {cfg.name} "
+                             f"has no LRAM layer")
+        cfg = dataclasses.replace(
+            cfg, lram=dataclasses.replace(cfg.lram,
+                                          interp_impl=args.placement)
+        )
+
     rng = np.random.default_rng(args.seed)
     key = jax.random.PRNGKey(args.seed)
     params, state = transformer.init(key, cfg)
+    if args.grow_to:
+        params, cfg, _ = memctl.grow_model(params, cfg, 2**args.grow_to)
+    if args.ckpt_dir:
+        step, restored = CheckpointManager(args.ckpt_dir).restore(
+            {"params": params, "model_state": state}
+        )
+        if restored is None:
+            raise SystemExit(f"no restorable checkpoint in {args.ckpt_dir}")
+        params, state = restored["params"], restored["model_state"]
+        print(json.dumps({"restored_step": step}))
+
+    controller = None
+    if args.hbm_budget_mb > 0 or args.spill_at_tick >= 0:
+        controller = memctl.MemoryController(memctl.LifecyclePolicy(
+            hbm_budget_bytes=(int(args.hbm_budget_mb * 2**20)
+                              if args.hbm_budget_mb > 0 else None),
+            spill_at_tick=(args.spill_at_tick
+                           if args.spill_at_tick >= 0 else None),
+        ))
 
     num_requests = (2 * args.batch if args.requests is None
                     else args.requests)
@@ -88,8 +146,10 @@ def main(argv=None):
         slots=args.batch,
         max_len=args.prompt_len + args.gen,
         mode=args.mode,
-    ))
+    ), controller=controller)
     report = engine.run(trace)
+    if controller is not None and controller.events:
+        print(json.dumps({"lifecycle": controller.events}))
 
     if args.json:
         print(json.dumps(report.summary(cfg.name)))

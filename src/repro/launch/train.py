@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import configs, data, optim
+from repro import configs, data, memctl, optim
 from repro.checkpoint import CheckpointManager
 from repro.core import lookup
 from repro.distributed import fault, sharding
@@ -96,6 +96,10 @@ def main(argv=None):
     p.add_argument("--ckpt-dir", default="")
     p.add_argument("--ckpt-every", type=int, default=100)
     p.add_argument("--eval-every", type=int, default=0)
+    p.add_argument("--grow-at", default="",
+                   help="memory-growth schedule STEP:NEW_LOG2[,STEP:...] — "
+                        "grow the value table online at the given steps "
+                        "(repro.memctl; e.g. '100:19,500:20')")
     p.add_argument("--simulate-failure-at", type=int, default=-1)
     p.add_argument("--log-every", type=int, default=10)
     p.add_argument("--seed", type=int, default=0)
@@ -119,25 +123,45 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(args.seed)
     params, model_state = transformer.init(key, cfg)
-    # write-back-capable placements (tiered, sharded-tiered — discovered
-    # via the resolved lookup plan) own their sparse optimizer step
-    # (write-back SGD at the paper's memory LR); the dense Adam below
-    # never sees their tables
-    stores = (
-        lookup.find_stores(params)
-        if any(p.table_update == "writeback"
-               for p in lookup.model_plans(cfg))
-        else []
-    )
-    for _, store in stores:
-        store.writeback_lr = args.lr * args.memory_lr_mult
-        store.warm()
+
+    def bind_stores(params):
+        # write-back-capable placements (tiered, sharded-tiered —
+        # discovered via the resolved lookup plan) own their sparse
+        # optimizer step (write-back SGD at the paper's memory LR); the
+        # dense Adam below never sees their tables
+        stores = (
+            lookup.find_stores(params)
+            if any(p.table_update == "writeback"
+                   for p in lookup.model_plans(cfg))
+            else []
+        )
+        for _, store in stores:
+            store.writeback_lr = args.lr * args.memory_lr_mult
+            store.warm()
+        return stores
+
+    stores = bind_stores(params)
     if mesh is not None:
-        params = sharding.shard_params(params, mesh)
+        params = sharding.shard_params(params, mesh, model_cfg=cfg)
     opt_state = optim.adam_init(params)
-    residual = optim.compression_init(params, args.compression)["residual"]
-    if residual is None:
-        residual = jnp.zeros(())  # jit-friendly placeholder
+
+    def init_residual(params):
+        residual = optim.compression_init(params,
+                                          args.compression)["residual"]
+        if residual is None:
+            residual = jnp.zeros(())  # jit-friendly placeholder
+        return residual
+
+    residual = init_residual(params)
+
+    controller = None
+    if args.grow_at:
+        controller = memctl.MemoryController(memctl.LifecyclePolicy(
+            grow_at=memctl.parse_grow_at(args.grow_at)
+        ))
+        if cfg.lram is None:
+            raise SystemExit(f"--grow-at needs a memory arch; {cfg.name} "
+                             f"has no LRAM layer")
 
     start_step = 0
     mgr = None
@@ -145,6 +169,16 @@ def main(argv=None):
         mgr = CheckpointManager(args.ckpt_dir, keep=3)
         latest = mgr.latest_step()
         if latest is not None:
+            if controller is not None:
+                # growths that fired before the checkpoint was taken must
+                # be re-applied first, so the restore target (and its
+                # grow-on-restore path) has the grown shape
+                params, cfg, opt_state, changed = controller.catch_up(
+                    latest, params, cfg, opt_state
+                )
+                if changed:
+                    stores = bind_stores(params)
+                    residual = init_residual(params)
             tree = {"params": params, "opt": opt_state,
                     "model_state": model_state}
             step_found, restored = mgr.restore(tree)
@@ -160,6 +194,25 @@ def main(argv=None):
     timer = fault.StepTimer()
 
     for step in range(start_step, args.steps):
+        if controller is not None:
+            params, cfg, opt_state, changed = controller.on_train_step(
+                step, params, cfg, opt_state
+            )
+            if changed:
+                # the grown table changes traced shapes (and, for stores,
+                # capacity behind the same handles): re-bind write-back,
+                # re-jit the step against the new config, and re-size the
+                # compression residual (error feedback restarts at zero —
+                # it mirrors params, including any grown dense table)
+                stores = bind_stores(params)
+                step_fn = build_train_step(cfg, opt_cfg, mesh,
+                                           args.compression)
+                residual = init_residual(params)
+                ev = controller.events[-1]
+                print(json.dumps({
+                    "grow": f"2^{ev['new_log2']}", "step": step,
+                    "pause_s": ev["pause_s"],
+                }))
         if step == args.simulate_failure_at:
             if mgr:
                 mgr.wait()

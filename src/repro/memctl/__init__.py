@@ -1,0 +1,42 @@
+"""Memory lifecycle manager: telemetry, online growth, live migration.
+
+The lookup-plan registry (`repro.core.lookup`) froze the memory layer's
+shape at construction: capacity, placement, and storage were fixed the
+moment `resolve` ran.  This package is the lifecycle layer above it —
+everything that changes a *running* model's memory without a restart:
+
+* `telemetry` — jit-safe per-row access counters (segment-sum over lookup
+  indices, carried like optimizer state) and store-side per-shard
+  counters, aggregated into hot/cold/dead utilisation reports.
+* `growth` — `grow` / `grow_model`: enlarge the value table in place.
+  Append-only by construction (`indexing.grow_torus` doubles the torus'
+  K_0, which preserves every old flat index); new rows warm-start from
+  their nearest coarse-lattice parent, so pre-growth lookups reproduce
+  bit-exactly for every storage kind.
+* `migrate` — `migrate` / `migrate_model`: convert a live model between
+  placement cells (dense ↔ tiered ↔ sharded-tiered, any storage pair) by
+  streaming the byte-compatible checkpoint shard layout in memory —
+  same-storage migrations are payload-exact.
+* `controller` — `MemoryController`: the policy loop the trainer calls on
+  a step schedule (`launch/train.py --grow-at`) and the serve engine
+  calls between decode ticks (HBM-budget spill of a dense table to the
+  tiered store without dropping in-flight requests).
+
+See docs/lifecycle.md for the design narrative, the growth math, the
+migration matrix, and pause-time expectations.
+"""
+
+from repro.memctl.controller import (  # noqa: F401
+    LifecyclePolicy,
+    MemoryController,
+    parse_grow_at,
+)
+from repro.memctl.growth import grow, grow_model, grown_cfg  # noqa: F401
+from repro.memctl.migrate import migrate, migrate_model  # noqa: F401
+from repro.memctl.telemetry import (  # noqa: F401
+    grow_telemetry,
+    store_telemetry,
+    telemetry_init,
+    telemetry_update,
+    utilisation_report,
+)

@@ -1,0 +1,191 @@
+"""The lifecycle policy loop: when to grow, when to spill.
+
+`MemoryController` owns the *decisions*; `growth`/`migrate` own the
+mechanics.  Two call sites drive it:
+
+* **Trainer** (`launch/train.py --grow-at STEP:LOG2[,STEP:LOG2...]`):
+  `on_train_step` fires each scheduled growth exactly once when its step
+  arrives, growing params + Adam moments and returning the new
+  `ModelConfig` — the trainer re-jits its step function and continues.
+  `catch_up` applies growths that already happened before a resumed
+  checkpoint's step, so the restore target has the grown shape.
+* **Serve engine** (`ServeEngine(..., controller=...)`): `on_tick` runs
+  between decode ticks.  When the dense memory table's device bytes
+  exceed `hbm_budget_bytes` (or at the deterministic `spill_at_tick`, for
+  tests and demos), it migrates the table to the tiered placement —
+  `ServeEngine.swap_model` rebuilds the jitted steps around the new
+  params while the slot pool and KV cache carry every in-flight request
+  across the move.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+from repro.core import lookup
+from repro.memctl import growth, migrate
+
+
+def parse_grow_at(arg: str) -> tuple[tuple[int, int], ...]:
+    """Parse `--grow-at` syntax: "STEP:NEW_LOG2[,STEP:NEW_LOG2...]"."""
+    events = []
+    for part in arg.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            step_s, log2_s = part.split(":")
+            events.append((int(step_s), int(log2_s)))
+        except ValueError:
+            raise ValueError(
+                f"bad --grow-at entry {part!r}; expected STEP:NEW_LOG2"
+            ) from None
+    events.sort()
+    for (s0, l0), (s1, l1) in zip(events, events[1:]):
+        if s1 == s0:
+            raise ValueError(
+                f"--grow-at steps must be distinct: step {s0} appears "
+                f"twice (grow straight to 2^{max(l0, l1)} instead)"
+            )
+        if l1 <= l0:
+            raise ValueError(
+                f"--grow-at sizes must increase: step {s1} grows to "
+                f"2^{l1} after step {s0} grew to 2^{l0}"
+            )
+    return tuple(events)
+
+
+@dataclasses.dataclass(frozen=True)
+class LifecyclePolicy:
+    """What the controller reacts to (all triggers optional)."""
+
+    grow_at: tuple[tuple[int, int], ...] = ()  # (step, new_log2_locations)
+    hbm_budget_bytes: int | None = None        # serve: spill dense beyond
+    spill_at_tick: int | None = None           # serve: deterministic spill
+    spill_tiered: Any = None                   # TieredSpec for the spill
+
+
+def _default_spill_spec(num_locations: int):
+    from repro.memstore import TieredSpec
+
+    # shard_rows must divide N (a power of two); ~32 shards, >=512 rows
+    shard_rows = max(512, min(8192, num_locations // 32))
+    while num_locations % shard_rows:
+        shard_rows //= 2
+    return TieredSpec(shard_rows=shard_rows,
+                      cache_slots=max(2, (num_locations // shard_rows) // 4))
+
+
+class MemoryController:
+    """Policy loop over `repro.memctl.growth` / `.migrate` (see module
+    docstring for the two call sites)."""
+
+    def __init__(self, policy: LifecyclePolicy):
+        self.policy = policy
+        # grow_at events already applied — keyed by the full (step, log2)
+        # pair, and shared by on_train_step and catch_up, so a run and its
+        # resumed relaunch apply exactly the same schedule
+        self._grown: set[tuple[int, int]] = set()
+        self._spilled = False
+        self.events: list[dict[str, Any]] = []  # applied, for logs/reports
+
+    # ------------------------------------------------------------- training
+
+    def _apply_growth(self, params, model_cfg, opt_state, step: int,
+                      new_log2: int):
+        new_n = 2 ** new_log2
+        t0 = time.perf_counter()
+        params, model_cfg, opt_state = growth.grow_model(
+            params, model_cfg, new_n, opt_state=opt_state
+        )
+        self._grown.add((step, new_log2))
+        self.events.append({
+            "event": "grow", "step": step, "new_log2": new_log2,
+            "pause_s": round(time.perf_counter() - t0, 4),
+        })
+        return params, model_cfg, opt_state
+
+    def on_train_step(self, step: int, params, model_cfg, opt_state=None):
+        """Fire scheduled growths whose step has arrived.  Returns
+        `(params, model_cfg, opt_state, changed)`; on `changed`, re-jit
+        the train step against the new config."""
+        changed = False
+        for ev_step, new_log2 in self.policy.grow_at:
+            if ev_step == step and (ev_step, new_log2) not in self._grown \
+                    and 2 ** new_log2 > model_cfg.lram.num_locations:
+                params, model_cfg, opt_state = self._apply_growth(
+                    params, model_cfg, opt_state, ev_step, new_log2
+                )
+                changed = True
+        return params, model_cfg, opt_state, changed
+
+    def catch_up(self, resume_step: int, params, model_cfg, opt_state=None):
+        """Apply every growth that fired before `resume_step` (exclusive of
+        events at `resume_step` itself, which the loop will fire), so a
+        checkpoint taken after growth restores into the grown shape."""
+        changed = False
+        for ev_step, new_log2 in self.policy.grow_at:
+            if ev_step < resume_step \
+                    and (ev_step, new_log2) not in self._grown \
+                    and 2 ** new_log2 > model_cfg.lram.num_locations:
+                params, model_cfg, opt_state = self._apply_growth(
+                    params, model_cfg, opt_state, ev_step, new_log2
+                )
+                changed = True
+        return params, model_cfg, opt_state, changed
+
+    # -------------------------------------------------------------- serving
+
+    def _table_device_bytes(self, model_cfg) -> int:
+        lram = model_cfg.lram
+        return (len(model_cfg.lram_layers)
+                * lram.num_locations * lram.table_bytes_per_entry)
+
+    def _spill_due(self, engine) -> bool:
+        pol = self.policy
+        if pol.spill_at_tick is not None \
+                and engine.ticks >= pol.spill_at_tick:
+            return True
+        return (pol.hbm_budget_bytes is not None
+                and self._table_device_bytes(engine.cfg)
+                > pol.hbm_budget_bytes)
+
+    def on_tick(self, engine) -> bool:
+        """Between-decode-ticks hook: spill a dense memory table that has
+        outgrown its HBM budget to the tiered store.  Returns True when
+        the engine's model was swapped (the caller refreshes its cached
+        store-stat baseline)."""
+        if self._spilled or engine.cfg.lram is None:
+            return False
+        if not (self.policy.hbm_budget_bytes is not None
+                or self.policy.spill_at_tick is not None):
+            return False
+        plans = lookup.model_plans(engine.cfg)
+        if not plans or plans[0].placement != "dense":
+            self._spilled = True  # already offloaded: nothing to spill
+            return False
+        if not self._spill_due(engine):
+            return False
+        lram = engine.cfg.lram
+        # precedence: explicit policy spec > the config's own tuned
+        # TieredSpec (a dense-overridden tiered arch keeps its geometry)
+        # > generic defaults sized from N
+        spec = (self.policy.spill_tiered or lram.tiered
+                or _default_spill_spec(lram.num_locations))
+        dst = dataclasses.replace(lram, interp_impl="tiered", tiered=spec)
+        t0 = time.perf_counter()
+        params, model_cfg = migrate.migrate_model(
+            engine.params, engine.cfg, dst
+        )
+        engine.swap_model(params, model_cfg)
+        for _, store in engine.stores:
+            store.warm()
+        self._spilled = True
+        self.events.append({
+            "event": "spill", "tick": engine.ticks,
+            "placement": "dense->tiered",
+            "pause_s": round(time.perf_counter() - t0, 4),
+        })
+        return True

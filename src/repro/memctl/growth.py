@@ -1,0 +1,182 @@
+"""Online capacity growth: enlarge a live value table, append-only.
+
+The paper's headline claim — "continued scaling with memory size up to
+the limits tested" — makes capacity the axis worth changing *mid-run*.
+Growth here is a warm start derived from the lattice structure
+(`repro.core.indexing`):
+
+1. **The torus grows index-preservingly.**  `grow_torus` multiplies the
+   wrap length K_0 by the (power-of-two) growth factor.  K_0's mixed-radix
+   digit carries no weight in `encode_points`, so every lattice point of
+   the old fundamental box keeps its exact flat index, and the new points
+   get indices in `[old_N, new_N)` — growth is an append, never a
+   permutation.
+2. **New rows copy their nearest coarse-lattice parent.**  A new point,
+   wrapped onto the *old* torus, lands on the old lattice point that
+   served its queries before growth (`growth_parents`; for `grow_torus`
+   enlargements the mapping reduces to `j mod old_N`).  Copying the
+   parent's row makes pre-growth lookups reproduce **bit-exactly** for
+   every storage kind: fp32 rows copy, quantized rows copy payload +
+   per-row scale (no requantization error).  Post-growth training then
+   diverges the aliases apart — that is the utilisation-recovery curve
+   `benchmarks/table10_lifecycle.py` measures.
+3. **Each placement grows in its own layout.**  Dense tables (and
+   `QuantizedTable` payload+scale) concatenate on device; tiered stores
+   append host shards without touching the device cache
+   (`TieredValueStore.grow_rows`); sharded-tiered stores append whole row
+   ranges (`ShardedTieredStore.grow_rows`).  Mesh-sharded dense tables
+   (`interp_impl="sharded"`) report `supports_growth=False` — reshard by
+   relaunch, or migrate to sharded-tiered first.
+
+`grow_model` applies the same step across a full model tree (every
+`lram/values` leaf plus its Adam moments, so the optimizer warm-starts
+too) and returns the updated `ModelConfig` — re-jit the train/decode step
+against it, nothing else changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import indexing, lookup
+from repro.quant import QuantizedTable
+
+
+def _growth_factor(old_n: int, new_num_rows: int) -> int:
+    if new_num_rows <= old_n or new_num_rows % old_n:
+        raise ValueError(
+            f"can only grow to a multiple of the current size: "
+            f"{old_n} -> {new_num_rows}"
+        )
+    factor = new_num_rows // old_n
+    if factor & (factor - 1):
+        raise ValueError(
+            f"growth factor must be a power of two, got {factor}"
+        )
+    return factor
+
+
+def grown_cfg(cfg, new_num_rows: int):
+    """The LRAMConfig after growing to `new_num_rows`: log2_locations
+    bumped, the explicit (index-preserving) torus attached, and — for
+    sharded-tiered placements — `model_shards` scaled with the appended
+    ranges."""
+    factor = _growth_factor(cfg.num_locations, new_num_rows)
+    new_spec = indexing.grow_torus(cfg.torus_spec, factor)
+    kw: dict[str, Any] = {
+        "log2_locations": cfg.log2_locations + factor.bit_length() - 1,
+        "torus": new_spec,
+    }
+    if cfg.interp_impl == "sharded-tiered":
+        ranges = cfg.model_shards
+        if ranges <= 0:
+            from repro.distributed import context as _ctx
+            from repro.distributed.sharded_lram import AXIS
+
+            mesh = _ctx.get_mesh()
+            ranges = (mesh.shape[AXIS]
+                      if mesh is not None and AXIS in mesh.axis_names else 1)
+        kw["model_shards"] = ranges * factor
+    return dataclasses.replace(cfg, **kw)
+
+
+def _grow_array(x, parents):
+    idx = jnp.asarray(parents, jnp.int32)
+    return jnp.concatenate([x, jnp.take(x, idx, axis=0)], axis=0)
+
+
+def _grow_table(table, new_num_rows: int, parents: np.ndarray,
+                seen: set[int]):
+    """Grow one table object (dense array, QuantizedTable, or store).
+    `seen` guards store nodes shared across tree positions (params +
+    optimizer moments hold the same object) from growing twice."""
+    if lookup.is_store(table):
+        if id(table) not in seen:
+            seen.add(id(table))
+            table.grow_rows(new_num_rows, parents)
+        return table
+    if isinstance(table, QuantizedTable):
+        # payload + per-row scale copy: bit-exact, no requantization
+        return QuantizedTable(
+            q=_grow_array(table.q, parents),
+            scale=_grow_array(table.scale, parents),
+            kind=table.kind,
+        )
+    return _grow_array(table, parents)
+
+
+def grow(params, cfg, new_num_rows: int):
+    """Grow one LRAM layer's value table in place: returns
+    `(new_params, new_cfg)`.
+
+    `params` is the layer's param dict (`{"values": ..., "qnorm": ...}`).
+    Dense tables come back as new (longer) arrays; store tables mutate in
+    place and keep their identity, so serve-engine and trainer handles
+    stay valid.  Query-norm parameters are per-feature and untouched.
+    """
+    plan = lookup.resolve(cfg)
+    if not plan.supports_growth:
+        raise lookup.LookupPlanError(
+            plan.placement, plan.storage, plan.kernel,
+            "placement cannot grow live (mesh-sharded dense tables "
+            "reshard by relaunch, or migrate to sharded-tiered first)",
+        )
+    old_n = cfg.num_locations
+    new_cfg = grown_cfg(cfg, new_num_rows)
+    parents = indexing.growth_parents(
+        cfg.torus_spec, new_cfg.torus_spec, old_n, new_num_rows
+    )
+    new_params = dict(params)
+    new_params["values"] = _grow_table(
+        params["values"], new_num_rows, parents, set()
+    )
+    return new_params, new_cfg
+
+
+def _grow_tree(tree, new_num_rows: int, parents, seen):
+    """Grow every `lram/values` leaf in a model-sized pytree (params, or
+    an optimizer-moment tree mirroring params)."""
+    return lookup.map_memory_tables(
+        tree, lambda t: _grow_table(t, new_num_rows, parents, seen)
+    )
+
+
+def grow_model(params, model_cfg, new_num_rows: int, *, opt_state=None):
+    """Grow every memory layer of a model to `new_num_rows` locations.
+
+    Returns `(params, model_cfg, opt_state)` — `opt_state` is passed
+    through untouched when None.  Adam moments for dense tables grow by
+    the same parent copy (the alias rows inherit their parent's gradient
+    statistics: a warm start, matching the values themselves); stores are
+    leafless in the moment trees and shared with params, so the identity
+    guard keeps them from growing twice.
+    """
+    if model_cfg.lram is None or not model_cfg.lram_layers:
+        raise ValueError(f"{model_cfg.name} has no LRAM memory layer")
+    lram_cfg = model_cfg.lram
+    plan = lookup.resolve(lram_cfg)
+    if not plan.supports_growth:
+        raise lookup.LookupPlanError(
+            plan.placement, plan.storage, plan.kernel,
+            "placement cannot grow live",
+        )
+    old_n = lram_cfg.num_locations
+    new_lram = grown_cfg(lram_cfg, new_num_rows)
+    parents = indexing.growth_parents(
+        lram_cfg.torus_spec, new_lram.torus_spec, old_n, new_num_rows
+    )
+    seen: set[int] = set()
+    params = _grow_tree(params, new_num_rows, parents, seen)
+    if opt_state is not None:
+        opt_state = dict(opt_state)
+        for key in ("mu", "nu"):
+            if key in opt_state:
+                opt_state[key] = _grow_tree(
+                    opt_state[key], new_num_rows, parents, seen
+                )
+    new_model_cfg = dataclasses.replace(model_cfg, lram=new_lram)
+    return params, new_model_cfg, opt_state

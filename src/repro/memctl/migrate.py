@@ -1,0 +1,135 @@
+"""Live plan-to-plan migration: move a value table between placement ×
+storage cells without a restart.
+
+The checkpoint manager already defines a byte-level lingua franca for
+memory tables: a stream of `(payload shard, per-row scales)` pairs with
+global shard ids, convertible between dense / tiered / sharded-tiered and
+any storage kind (`TieredValueStore.load_shard`).  Migration reuses that
+layout **in memory**: the source table is read in storage form (1-byte
+payload + scales for quantized tables, fp rows otherwise) and streamed
+into a freshly built target of the destination plan's layout
+(`LookupPlan.build_empty` for store placements).
+
+Exactness contract:
+
+* same-storage migrations are **payload-exact** — the bytes move, nothing
+  is requantized, so a round-trip dense → tiered → sharded-tiered → dense
+  reproduces logits exactly;
+* quantized → fp32 dequantizes exactly (fp32 product of payload and
+  scale); fp32 → quantized rounds to nearest, within
+  `repro.quant.max_abs_error_bound`;
+* cross-kind quantized pairs requantize through fp32 (the same path a
+  cross-kind checkpoint restore takes).
+
+Mesh-sharded dense placements (`interp_impl="sharded"`) are excluded:
+their table lives as partitioned device buffers owned by the mesh, and
+moving it is a resharding relaunch, not a live migration.
+
+`migrate_model` swaps every `lram/values` leaf and returns the updated
+`ModelConfig`; the serve engine applies it between decode ticks via
+`MemoryController` + `ServeEngine.swap_model`, so in-flight requests keep
+their slots and KV cache across the move.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import quant
+from repro.core import lookup
+from repro.quant import QuantizedTable
+
+
+def _read_rows(table, lo: int, hi: int):
+    """(payload, scales|None) rows [lo, hi) of any table type, in storage
+    form — the in-memory analogue of reading a checkpoint shard."""
+    if lookup.is_store(table):
+        return table._read_rows_raw(np.arange(lo, hi, dtype=np.int64))
+    if isinstance(table, QuantizedTable):
+        return (np.asarray(table.q[lo:hi]),
+                np.asarray(table.scale[lo:hi], np.float32))
+    return np.asarray(table[lo:hi]), None
+
+
+def _to_fp32(payload: np.ndarray, scales) -> np.ndarray:
+    if scales is None:
+        return np.asarray(payload, np.float32)
+    return quant.dequantize_rows_np(payload, scales)
+
+
+def migrate_table(table, src_cfg, dst_cfg):
+    """Build `dst_cfg`'s table from `table` (laid out per `src_cfg`)."""
+    src_plan = lookup.resolve(src_cfg)
+    dst_plan = lookup.resolve(dst_cfg)
+    for plan in (src_plan, dst_plan):
+        if plan.requires_mesh:
+            raise lookup.LookupPlanError(
+                plan.placement, plan.storage, plan.kernel,
+                "mesh-sharded dense tables do not migrate live — reshard "
+                "by relaunch, or use the sharded-tiered placement",
+            )
+    if (src_cfg.num_locations != dst_cfg.num_locations
+            or src_cfg.m != dst_cfg.m):
+        raise ValueError(
+            f"migration cannot change the table shape: "
+            f"{src_cfg.num_locations}x{src_cfg.m} -> "
+            f"{dst_cfg.num_locations}x{dst_cfg.m} (grow first)"
+        )
+    n = src_cfg.num_locations
+
+    if dst_plan.build_empty is not None:  # store target: stream shards
+        dst = dst_plan.build_empty()
+        rows = dst.shard_rows
+        for i in range(dst.num_shards):
+            payload, scales = _read_rows(table, i * rows, (i + 1) * rows)
+            # load_shard converts: same-kind passes bytes through (exact),
+            # fp input quantizes nearest, cross-kind requantizes
+            dst.load_shard(i, payload, scales)
+        if lookup.is_store(table):
+            dst.writeback_lr = table.writeback_lr
+        return dst
+
+    payload, scales = _read_rows(table, 0, n)
+    if dst_plan.storage == "fp32":
+        return jnp.asarray(_to_fp32(payload, scales))
+    if scales is not None \
+            and payload.dtype == quant.storage_dtype(dst_plan.storage):
+        return QuantizedTable(  # same-kind: payload-exact
+            q=jnp.asarray(payload), scale=jnp.asarray(scales),
+            kind=dst_plan.storage,
+        )
+    q, s = quant.quantize_rows_np(_to_fp32(payload, scales),
+                                  dst_plan.storage)
+    return QuantizedTable(q=jnp.asarray(q), scale=jnp.asarray(s),
+                          kind=dst_plan.storage)
+
+
+def migrate(params, src_cfg, dst_cfg):
+    """Migrate one LRAM layer's param dict: returns new params (the
+    query-norm leaves are placement-independent and shared)."""
+    new_params = dict(params)
+    new_params["values"] = migrate_table(params["values"], src_cfg, dst_cfg)
+    return new_params
+
+
+def migrate_model(params, model_cfg, dst_lram_cfg):
+    """Migrate every memory layer of a model to `dst_lram_cfg`'s cell.
+
+    Returns `(params, model_cfg)` with `model_cfg.lram` replaced.  Tables
+    shared across tree positions migrate once (identity-mapped).
+    """
+    if model_cfg.lram is None or not model_cfg.lram_layers:
+        raise ValueError(f"{model_cfg.name} has no LRAM memory layer")
+    src_cfg = model_cfg.lram
+    done: dict[int, object] = {}  # tables shared across paths migrate once
+
+    def _migrate_leaf(table):
+        if id(table) not in done:
+            done[id(table)] = migrate_table(table, src_cfg, dst_lram_cfg)
+        return done[id(table)]
+
+    new_params = lookup.map_memory_tables(params, _migrate_leaf)
+    return new_params, dataclasses.replace(model_cfg, lram=dst_lram_cfg)

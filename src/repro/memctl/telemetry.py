@@ -1,0 +1,146 @@
+"""Usage telemetry: who reads which memory rows, and how recently.
+
+Large Memory Layers with Product Keys (Lample et al., 2019) track
+key-usage statistics because a memory whose rows go *dead* stops earning
+its parameter budget — and Memory Layers at Scale (Berges et al., 2024)
+grows capacity as the dominant scaling axis, which only pays off if the
+grown rows come alive.  This module is the measurement side of that loop:
+
+* **In-graph counters** (`telemetry_init` / `telemetry_update`): a pytree
+  of per-bin hit counts plus an exponential moving average, updated by a
+  jit-safe segment-sum (scatter-add) over the lookup's index tensor.  The
+  pytree rides alongside optimizer state — carry it through the train
+  step like any other per-step accumulator.  `rows_per_bin` coarsens the
+  resolution for tables too large for per-row counters.
+* **Store-side counters** (`store_telemetry`): tiered and sharded-tiered
+  placements already walk every access host-side, so their stores count
+  per-shard hits for free (`TieredValueStore.row_stats`, aggregated
+  range-major by `ShardedTieredStore.row_stats` — plans with
+  `row_stats=True`).  One bin per host shard.
+* **Reports** (`utilisation_report`): hot/cold/dead bin fractions in the
+  benchmark row schema (`[name, us_per_call, derived]` — the same triples
+  `benchmarks/run.py` and the serve `--json` summary emit), so lifecycle
+  health drops into the existing tooling unchanged.
+
+`grow_telemetry` mirrors `memctl.grow`: appended rows start as fresh
+(dead) bins, which is exactly what the post-growth recovery curve in
+`benchmarks/table10_lifecycle.py` watches.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+Telemetry = dict[str, Any]
+
+
+def telemetry_init(num_rows: int, *, rows_per_bin: int = 1) -> Telemetry:
+    """Zeroed counters for a table of `num_rows`, one bin per
+    `rows_per_bin` consecutive rows (must divide `num_rows`)."""
+    if num_rows % rows_per_bin:
+        raise ValueError(
+            f"rows_per_bin={rows_per_bin} must divide num_rows={num_rows}"
+        )
+    bins = num_rows // rows_per_bin
+    return {
+        "counts": jnp.zeros(bins, jnp.float32),
+        "ema": jnp.zeros(bins, jnp.float32),
+        "steps": jnp.zeros((), jnp.int32),
+        "rows_per_bin": jnp.asarray(rows_per_bin, jnp.int32),
+    }
+
+
+def telemetry_update(tel: Telemetry, idx, *, decay: float = 0.95) -> Telemetry:
+    """One observation step: scatter-add the lookup's index tensor.
+
+    Pure and jit-safe (the segment-sum is a single `.at[].add`), so it can
+    live inside the jitted train step with `tel` as a carried pytree —
+    the optimizer-state pattern.  `idx` is any integer tensor of flat row
+    ids (e.g. the `(..., top_k)` access tensor from
+    `lram_apply(..., return_access=True)`).
+    """
+    flat = jnp.reshape(jnp.asarray(idx), (-1,)).astype(jnp.int32)
+    flat = flat // tel["rows_per_bin"]
+    hits = jnp.zeros_like(tel["counts"]).at[flat].add(1.0)
+    return {
+        "counts": tel["counts"] + hits,
+        "ema": decay * tel["ema"] + (1.0 - decay) * hits,
+        "steps": tel["steps"] + 1,
+        "rows_per_bin": tel["rows_per_bin"],
+    }
+
+
+def store_telemetry(store) -> Telemetry:
+    """Telemetry snapshot from a store's own per-shard counters (plans
+    with `row_stats=True`).  Host-side lifetime counts: `ema` mirrors
+    `counts` (the store tracks no decay), `steps` is the lookup count."""
+    counts, rows_per_bin = store.row_stats()
+    counts = jnp.asarray(np.asarray(counts, np.float32))
+    return {
+        "counts": counts,
+        "ema": counts,
+        "steps": jnp.asarray(int(store.stats["lookups"]), jnp.int32),
+        "rows_per_bin": jnp.asarray(rows_per_bin, jnp.int32),
+    }
+
+
+def grow_telemetry(tel: Telemetry, new_num_rows: int) -> Telemetry:
+    """Extend counters for a grown table: appended rows start dead."""
+    rpb = int(tel["rows_per_bin"])
+    if new_num_rows % rpb:
+        raise ValueError(
+            f"new_num_rows={new_num_rows} not divisible by "
+            f"rows_per_bin={rpb}"
+        )
+    extra = new_num_rows // rpb - tel["counts"].shape[0]
+    if extra < 0:
+        raise ValueError("telemetry cannot shrink")
+    pad = jnp.zeros(extra, jnp.float32)
+    return {
+        "counts": jnp.concatenate([tel["counts"], pad]),
+        "ema": jnp.concatenate([tel["ema"], pad]),
+        "steps": tel["steps"],
+        "rows_per_bin": tel["rows_per_bin"],
+    }
+
+
+def utilisation_report(tel: Telemetry, *, prefix: str = "util",
+                       hot_frac: float = 0.1,
+                       cold_quantile: float = 0.5) -> list[list[Any]]:
+    """Hot/cold/dead fractions as benchmark rows.
+
+    * dead — bins never counted (`counts == 0`): capacity earning nothing.
+    * hot mass — share of recent traffic (`ema`) landing on the hottest
+      `hot_frac` of bins: concentration (1.0 = one bin takes everything).
+    * cold — live bins whose `ema` sits below `cold_quantile` of the
+      live-bin median: allocated, warm once, barely read now.
+
+    Rows carry `us_per_call = 0.0` — they are derived/analytic rows, which
+    the bench gate (`tools/check_bench.py`) tracks for presence only.
+    """
+    counts = np.asarray(tel["counts"], np.float64)
+    ema = np.asarray(tel["ema"], np.float64)
+    bins = counts.size
+    steps = int(tel["steps"])
+    rpb = int(tel["rows_per_bin"])
+    dead = counts == 0
+    dead_frac = float(dead.mean()) if bins else 0.0
+    total = float(ema.sum())
+    k = max(1, int(round(bins * hot_frac)))
+    hot_mass = (float(np.sort(ema)[-k:].sum()) / total) if total > 0 else 0.0
+    live = ema[~dead]
+    if live.size:
+        thresh = cold_quantile * float(np.median(live))
+        cold_frac = float((live < thresh).mean())
+    else:
+        cold_frac = 0.0
+    meta = f"bins={bins} rows_per_bin={rpb} steps={steps}"
+    return [
+        [f"{prefix}_dead_frac", 0.0, f"{dead_frac:.4f} {meta}"],
+        [f"{prefix}_hot{int(round(hot_frac * 100))}_mass", 0.0,
+         f"{hot_mass:.4f} {meta}"],
+        [f"{prefix}_cold_frac", 0.0, f"{cold_frac:.4f} {meta}"],
+    ]

@@ -132,6 +132,10 @@ def _tiered_factory(cfg, storage: str, kernel: str) -> lookup.LookupPlan:
         build_table=build_table, interp=interp,
         supports_prefetch=True, table_update="writeback",
         checkpoint_layout="shards",
+        supports_growth=True, row_stats=True,
+        build_empty=lambda: TieredValueStore(
+            cfg.num_locations, cfg.m, spec
+        ),
     )
 
 

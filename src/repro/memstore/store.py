@@ -139,6 +139,9 @@ class TieredValueStore:
         self.last_access: np.ndarray | None = None
 
         self._traced_interp = None  # built lazily by repro.memstore.interp
+        # per-shard access counts (usage telemetry, repro.memctl): unlike
+        # `stats`, indexed by shard so dead/hot regions are localizable
+        self.shard_access = np.zeros(self.num_shards, np.int64)
         self.reset_stats()
 
     # ------------------------------------------------------------------ init
@@ -274,6 +277,7 @@ class TieredValueStore:
             self.stats["hits"] += int(resident_before[v].sum())
             self.stats["misses"] += int((~resident_before[v] & mask[v]).sum())
             self.stats["uncached"] += int((~mask[v]).sum())
+            np.add.at(self.shard_access, shard[v], 1)
         return shard, row, slot.astype(np.int64), mask
 
     def prefetch(self, idx, *, sync_device: bool = True) -> None:
@@ -586,9 +590,86 @@ class TieredValueStore:
             self._dirty.discard(slot)
             self._dev_stale.add(slot)
 
+    # ------------------------------------------------------------- lifecycle
+
+    def _read_rows_raw(self, rows: np.ndarray):
+        """(payload, scales|None) for global row ids, in *storage* form —
+        1-byte payload + per-row scales for quantized stores, fp values
+        otherwise.  Reads the host tier (dirty cache slots flushed first),
+        without touching cache residency, LRU order, or stats: this is the
+        bulk-copy path growth and migration use, not a lookup."""
+        self.flush()
+        shard, row = self._split(np.asarray(rows).reshape(-1))
+        payload = np.asarray(self._host[shard, row])
+        scales = (np.asarray(self._host_scale[shard, row])
+                  if self.quant != "none" else None)
+        return payload, scales
+
+    def grow_rows(self, new_num_rows: int, parents: np.ndarray) -> None:
+        """Append rows [num_rows, new_num_rows), each initialised from its
+        (old-table) parent row id in `parents` — in place.
+
+        Growth is append-only by construction (`repro.core.indexing.
+        grow_torus` preserves every old flat index), so the existing host
+        shards keep their ids and the device cache — slots, shard→slot
+        indirection, LRU order, dirty flags — stays valid untouched: the
+        pause is one host-side copy, no device traffic.  Quantized stores
+        copy parent payload + per-row scale verbatim, so pre-growth
+        lookups reproduce bit-exactly for every storage kind.  The cache
+        slot count is left as built (`TieredSpec.cache_slots` already caps
+        it); appended shards simply compete for the same slots.
+        """
+        delta = new_num_rows - self.num_rows
+        if delta <= 0 or delta % self.shard_rows:
+            raise ValueError(
+                f"new_num_rows={new_num_rows} must exceed {self.num_rows} "
+                f"by a multiple of shard_rows={self.shard_rows}"
+            )
+        parents = np.asarray(parents, np.int64).reshape(-1)
+        if parents.size != delta:
+            raise ValueError(
+                f"need {delta} parent rows, got {parents.size}"
+            )
+        if parents.size and (parents.min() < 0
+                             or parents.max() >= self.num_rows):
+            raise ValueError("parent row ids must index the old table")
+        payload, scales = self._read_rows_raw(parents)
+        new_shards = delta // self.shard_rows
+        pay3 = payload.reshape(new_shards, self.shard_rows, self.m)
+        sc2 = (scales.reshape(new_shards, self.shard_rows)
+               if scales is not None else None)
+        old_host, old_scale = self._host, self._host_scale
+        old_n_shards = self.num_shards
+        self.num_rows = new_num_rows
+        self.num_shards += new_shards
+        if self.spec.backing == "ram":
+            self._host = np.concatenate([old_host, pay3])
+            if self.quant != "none":
+                self._host_scale = np.concatenate([old_scale, sc2])
+        else:  # mmap: a fresh file at the new shape (name encodes rows)
+            self._host, self._host_scale = self._alloc_host()
+            self._host[:old_n_shards] = old_host
+            self._host[old_n_shards:] = pay3
+            if self.quant != "none":
+                self._host_scale[:old_n_shards] = old_scale
+                self._host_scale[old_n_shards:] = sc2
+        self._shard_slot = np.concatenate([
+            self._shard_slot, np.full(new_shards, -1, np.int32)
+        ])
+        self.shard_access = np.concatenate([
+            self.shard_access, np.zeros(new_shards, np.int64)
+        ])
+        self.last_access = None  # old access ids stay valid, but re-prime
+
+    def row_stats(self) -> tuple[np.ndarray, int]:
+        """(per-shard access counts, rows per shard) — the store-side input
+        to `repro.memctl.telemetry` (coarse: one bin per host shard)."""
+        return self.shard_access.copy(), self.shard_rows
+
     # --------------------------------------------------------------- stats
 
     def reset_stats(self) -> None:
+        self.shard_access[:] = 0
         self.stats = {
             "lookups": 0, "hits": 0, "misses": 0, "uncached": 0,
             "fills": 0, "evictions": 0, "writebacks": 0,

@@ -181,10 +181,17 @@ class EngineReport:
 
 
 class ServeEngine:
-    """Slot-pool serving engine (see module docstring for the lifecycle)."""
+    """Slot-pool serving engine (see module docstring for the lifecycle).
+
+    `controller` (a `repro.memctl.MemoryController`) hooks in between
+    decode ticks: when the memory table outgrows its HBM budget the
+    controller migrates it to the tiered store and calls `swap_model`,
+    which rebuilds the jitted steps around the new params while the slot
+    pool and KV cache carry every in-flight request across the move.
+    """
 
     def __init__(self, params, state, cfg: ModelConfig,
-                 engine_cfg: EngineConfig):
+                 engine_cfg: EngineConfig, *, controller=None):
         if cfg.objective != "clm":
             raise ValueError("serving requires a causal-LM arch")
         if cfg.family in ("encdec", "vlm"):
@@ -192,8 +199,30 @@ class ServeEngine:
                 f"continuous batching supports decoder-only families; "
                 f"{cfg.name} is {cfg.family}"
             )
-        self.params, self.state, self.cfg = params, state, cfg
+        self.state = state
         self.engine_cfg = engine_cfg
+        self.controller = controller
+        self.ticks = 0  # decode ticks since construction (policy clock)
+        self._axes = transformer.cache_batch_axes(cfg, engine_cfg.max_len)
+        self.cache = transformer.init_cache(
+            cfg, engine_cfg.slots, engine_cfg.max_len
+        )
+        self.swap_model(params, cfg)
+
+    def swap_model(self, params, cfg: ModelConfig | None = None) -> None:
+        """(Re)bind the engine's jitted steps to `params` (and optionally a
+        new model config — e.g. after a live dense→tiered migration).
+
+        Slot state and the KV cache are untouched: the decode-slot shapes
+        depend only on the engine config, so in-flight requests resume on
+        the very next tick.  The swapped-in steps compile on first use
+        (one-time pause, the cost `benchmarks/table10_lifecycle.py`
+        reports as migration pause time)."""
+        self.params = params
+        if cfg is not None:
+            self.cfg = cfg
+        cfg = self.cfg
+        state = self.state
         # prefetch handles come from the lookup plan's capability flags
         # (tiered and sharded-tiered placements), not from isinstance
         # probing of params
@@ -201,10 +230,6 @@ class ServeEngine:
             lookup.find_stores(params)
             if any(p.supports_prefetch for p in lookup.model_plans(cfg))
             else []
-        )
-        self._axes = transformer.cache_batch_axes(cfg, engine_cfg.max_len)
-        self.cache = transformer.init_cache(
-            cfg, engine_cfg.slots, engine_cfg.max_len
         )
         # CPU has no buffer donation; donating there only logs warnings
         donate = () if jax.default_backend() == "cpu" else (2,)
@@ -224,7 +249,8 @@ class ServeEngine:
         # number of prefill compilations
         self._prefill = jax.jit(
             lambda tokens: transformer.prefill(
-                params, state, {"tokens": tokens}, cfg, engine_cfg.max_len
+                params, state, {"tokens": tokens}, cfg,
+                self.engine_cfg.max_len
             )
         )
 
@@ -355,6 +381,7 @@ class ServeEngine:
             )
             next_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
             step_s.append(time.perf_counter() - t_step)
+            self.ticks += 1
 
             # per-request attribution of this tick's cache-stat deltas
             if self.stores:
@@ -367,6 +394,12 @@ class ServeEngine:
                 # fill overlaps the next tick's dense compute
                 for _, store in self.stores:
                     store.prefetch_last()
+
+            # lifecycle hook: the controller may swap the model between
+            # ticks (e.g. spill a dense table that outgrew HBM to the
+            # tiered store); in-flight slots ride through untouched
+            if self.controller is not None and self.controller.on_tick(self):
+                prev_stats = self._store_stats()
 
             now = time.perf_counter() - t0
             for b in active:

@@ -1,4 +1,5 @@
-"""Checkpointing: roundtrip, atomicity, corruption fallback, async, retention."""
+"""Checkpointing: roundtrip, atomicity, corruption fallback, async,
+retention, and the size-mismatch paths (grow-on-restore / CheckpointError)."""
 
 import json
 import os
@@ -8,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointError, CheckpointManager
 
 
 @pytest.fixture
@@ -103,3 +104,107 @@ def test_manifest_contents(tmp_path, tree):
     assert man["step"] == 9
     assert "params/w" in man["leaves"]
     assert man["leaves"]["params/w"]["shape"] == [8, 4]
+
+
+# ---------------------------------------------------------------------------
+# size-mismatch paths: grow-on-restore vs a clear CheckpointError
+# ---------------------------------------------------------------------------
+
+
+def test_grow_on_restore_into_larger_store(tmp_path, rng):
+    """A smaller tiered checkpoint streams into a larger store: old shards
+    land at their ids, appended shards alias their coarse-lattice parent
+    (j mod old_N) — matching what repro.memctl.grow would have built."""
+    from repro.memstore import TieredSpec, TieredValueStore
+
+    dense = rng.normal(size=(2048, 8)).astype(np.float32)
+    spec = TieredSpec(shard_rows=256, cache_slots=2)
+    small = TieredValueStore.from_dense(dense, spec)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"values": small})
+
+    big = TieredValueStore(4096, 8, spec)
+    step, _ = mgr.restore({"values": big})
+    assert step == 1
+    got = big.to_dense()
+    np.testing.assert_array_equal(got[:2048], dense)
+    np.testing.assert_array_equal(got[2048:], dense)  # alias copy
+
+
+def test_grow_on_restore_dense_leaf(tmp_path, rng):
+    """A dense memory-table leaf grows on restore by the same alias rule."""
+    arr = rng.normal(size=(1024, 8)).astype(np.float32)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"lram": {"values": jnp.asarray(arr)}})
+    like = {"lram": {"values": jnp.zeros((2048, 8), jnp.float32)}}
+    step, restored = mgr.restore(like)
+    assert step == 1
+    got = np.asarray(restored["lram"]["values"])
+    np.testing.assert_array_equal(got[:1024], arr)
+    np.testing.assert_array_equal(got[1024:], arr)
+
+
+def test_restore_shrink_raises_checkpoint_error(tmp_path, rng):
+    """The reverse direction — a larger checkpoint into a smaller table —
+    is an explicit CheckpointError (raised through the fallback loop, not
+    swallowed), for stores and dense leaves alike."""
+    from repro.memstore import TieredSpec, TieredValueStore
+
+    dense = rng.normal(size=(4096, 8)).astype(np.float32)
+    spec = TieredSpec(shard_rows=256, cache_slots=2)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"values": TieredValueStore.from_dense(dense, spec)})
+    with pytest.raises(CheckpointError, match="shrink"):
+        mgr.restore({"values": TieredValueStore(2048, 8, spec)})
+
+    mgr2 = CheckpointManager(str(tmp_path / "d"))
+    mgr2.save(1, {"lram": {"values": jnp.asarray(dense)}})
+    with pytest.raises(CheckpointError, match="shrink"):
+        mgr2.restore({"lram": {"values": jnp.zeros((2048, 8))}})
+
+
+def test_restore_non_table_shape_mismatch_raises(tmp_path, rng):
+    """Non-memory-table leaves never grow silently: any shape mismatch is
+    a clear CheckpointError instead of a mis-shaped return value — and
+    the alias rule applies only to LRAM tables, NOT to coincidental
+    `values` leaves like pkm/values (their rows have no lattice parent)."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.asarray(rng.normal(size=(8, 4)).astype("f"))})
+    with pytest.raises(CheckpointError, match="shape mismatch"):
+        mgr.restore({"w": jnp.zeros((16, 4))})
+
+    mgr2 = CheckpointManager(str(tmp_path / "p"))
+    mgr2.save(1, {"pkm": {"values": jnp.asarray(
+        rng.normal(size=(8, 4)).astype("f"))}})
+    with pytest.raises(CheckpointError, match="shape mismatch"):
+        mgr2.restore({"pkm": {"values": jnp.zeros((16, 4))}})
+
+
+def test_restore_shard_geometry_mismatch_raises(tmp_path, rng):
+    from repro.memstore import TieredSpec, TieredValueStore
+
+    dense = rng.normal(size=(2048, 8)).astype(np.float32)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"values": TieredValueStore.from_dense(
+        dense, TieredSpec(shard_rows=256, cache_slots=2))})
+    other = TieredValueStore(2048, 8,
+                             TieredSpec(shard_rows=512, cache_slots=2))
+    with pytest.raises(CheckpointError, match="geometry"):
+        mgr.restore({"values": other})
+
+
+def test_grow_on_restore_quantized_payload_exact(tmp_path, rng):
+    """Grow-on-restore of a quantized store copies payload + scales into
+    the appended shards — bit-exact, like memctl.grow itself."""
+    from repro.memstore import TieredSpec, TieredValueStore
+
+    dense = rng.normal(size=(1024, 8)).astype(np.float32)
+    spec = TieredSpec(shard_rows=256, cache_slots=2, quant="int8")
+    small = TieredValueStore.from_dense(dense, spec)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"values": small})
+    big = TieredValueStore(2048, 8, spec)
+    mgr.restore({"values": big})
+    got = big.to_dense()
+    np.testing.assert_array_equal(got[:1024], small.to_dense())
+    np.testing.assert_array_equal(got[1024:], small.to_dense())

@@ -2,7 +2,7 @@
 matrix is numerically equivalent to the dense fp32 reference (eager + jit +
 grad; quantized cells within `repro.quant.max_abs_error_bound`), impossible
 cells raise `LookupPlanError` at resolve time, the legacy callable-hook
-protocol still works through the deprecation shim, and sharded-tiered
+protocol is gone (clear error, not a silent shim), and sharded-tiered
 stores train / checkpoint / serve like their single-range twins."""
 
 import textwrap
@@ -204,35 +204,17 @@ def test_storage_table_mismatch_raises_plan_error():
 
 
 # ---------------------------------------------------------------------------
-# legacy callable hooks: deprecated but working
+# legacy callable hooks: removed, with a clear error
 # ---------------------------------------------------------------------------
 
-def test_callable_hook_shim_warns_and_matches(reference):
-    """The old hook signature (values, idx, w) -> out still plugs into
-    lram_apply, now via plan_from_callable + DeprecationWarning."""
-    calls = []
-
-    def hook(values, idx, w):
-        calls.append(idx.shape)
-        return lram.gather_interp(values, idx, w)
-
+def test_callable_hook_protocol_removed(reference):
+    """The retired hook protocol fails loudly at resolve time — pointing
+    at the registry — instead of silently bypassing the plan."""
     cfg, x = reference["cfg"], reference["x"]
-    with pytest.warns(DeprecationWarning, match="callable interp_impl"):
-        y, _ = lram.lram_apply(reference["params"], reference["state"], x,
-                               cfg, interp_impl=hook)
-    assert calls, "hook was never invoked"
-    np.testing.assert_allclose(np.asarray(y), reference["twin_out"]["fp32"],
-                               atol=1e-5)
-
-
-def test_callable_hook_rejects_tiered_table():
-    cfg = make_cfg("tiered", "fp32", "reference")
-    params, state = lram.lram_init(KEY, cfg)
-    x = jax.random.normal(KEY, (2, cfg.in_dim))
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(lookup.LookupPlanError, match="callable"):
-            lram.lram_apply(params, state, x, cfg,
-                            interp_impl=lram.gather_interp)
+    with pytest.raises(lookup.LookupPlanError, match="removed"):
+        lram.lram_apply(reference["params"], reference["state"], x,
+                        cfg, interp_impl=lram.gather_interp)
+    assert not hasattr(lookup, "plan_from_callable")
 
 
 # ---------------------------------------------------------------------------
@@ -244,17 +226,24 @@ def test_plan_capabilities(model_mesh):
     assert not dense.supports_prefetch
     assert dense.table_update == "autodiff"
     assert dense.checkpoint_layout == "dense"
+    assert dense.supports_growth and not dense.row_stats
+    assert dense.table_rows_axis is None
 
     frozen = lookup.resolve(lram.LRAMConfig(**KW, table_quant="int8"))
     assert frozen.table_update == "frozen"
+    assert frozen.supports_growth
 
     tiered = lookup.resolve(make_cfg("tiered", "int8", "reference"))
     assert tiered.supports_prefetch
     assert tiered.table_update == "writeback"
     assert tiered.checkpoint_layout == "shards"
+    assert tiered.supports_growth and tiered.row_stats
+    assert tiered.build_empty is not None
 
     st = lookup.resolve(make_cfg("sharded-tiered", "fp32", "reference"))
     assert st.supports_prefetch and st.table_update == "writeback"
+    assert st.supports_growth and st.row_stats
+    assert st.build_empty is not None
 
     _ctx.set_mesh(model_mesh)
     try:
@@ -262,6 +251,10 @@ def test_plan_capabilities(model_mesh):
     finally:
         _ctx.set_mesh(None)
     assert sharded.requires_mesh and not sharded.supports_prefetch
+    # mesh-sharded dense tables reshard by relaunch, not live growth; the
+    # plan emits its own pspec row axis instead of a sharding-rule regex
+    assert not sharded.supports_growth
+    assert sharded.table_rows_axis == "model"
 
 
 @pytest.mark.slow
