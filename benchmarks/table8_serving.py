@@ -13,6 +13,11 @@ rows measure steady-state scheduling, not jit time.
 The `--smoke` form is the acceptance check: it additionally asserts that
 continuous batching sustains at least the static-batch throughput on the
 closed-loop trace.
+
+A multi-tenant row rides along: the same closed-loop trace with requests
+spread over a tenant pool and per-tenant memory overlays attached
+(`repro.serving.overlay`), reporting overlay hit-rate and bytes/tenant
+next to the throughput.
 """
 
 from __future__ import annotations
@@ -34,6 +39,8 @@ NUM_REQUESTS = 16
 RATES = (0.0, 4.0)            # requests/sec; 0 = closed loop
 SMOKE_REQUESTS = 8
 SMOKE_RATES = (0.0,)
+TENANTS = 4                   # multi-tenant row: tenant pool size
+OVERLAY_ROWS = 8              # per-tenant overlay capacity (rows/layer)
 
 
 def _measure(smoke: bool):
@@ -66,6 +73,30 @@ def _measure(smoke: bool):
                 + (f" hit={report.cache['hit_rate']}" if report.cache
                    else ""),
             ))
+    # multi-tenant overlay row: the closed-loop trace spread over a
+    # tenant pool, per-tenant copy-on-write overlays attached per slot
+    trace = synthetic_trace(
+        np.random.default_rng(0), num_requests,
+        vocab_size=cfg.vocab_size, max_prompt=MAX_PROMPT,
+        max_gen=max_gen, rate=0.0, mixed=True, tenants=TENANTS,
+    )
+    engine = ServeEngine(params, state, cfg, EngineConfig(
+        slots=SLOTS, max_len=MAX_PROMPT + max_gen,
+        overlay_rows=OVERLAY_ROWS,
+    ))
+    engine.run(trace)
+    report = engine.run(trace)
+    us = 1e6 / report.tokens_per_sec if report.tokens_per_sec else 0.0
+    o = report.overlay
+    rows.append((
+        "serving_multitenant_load0", round(us, 3),
+        f"tokens_per_sec={report.tokens_per_sec:.1f} "
+        f"tenants={o['tenants']} overlay_rows={OVERLAY_ROWS} "
+        f"overlay_hit_rate={o['hit_rate']} "
+        f"bytes_per_tenant={o['bytes_per_tenant']} "
+        f"writebacks={o['writebacks']}",
+    ))
+    tps[("multitenant", 0.0)] = report.tokens_per_sec
     return rows, tps
 
 

@@ -114,6 +114,14 @@ class LookupPlan:
     * ``build_empty`` — zero-filled table of this plan's layout (store
       placements only): the migration target `repro.memctl.migrate`
       streams shards into.
+    * ``supports_overlay`` — the serve engine may fuse a per-tenant
+      copy-on-write row overlay (`repro.serving.overlay`) into this
+      plan's lookup: overlay rows are stored in the *same* storage kind
+      as the base table and resolved host-side into per-slot delta packs
+      (`repro.core.overlay`), so the device graph never changes shape
+      across attach/detach.  Requires host-readable base rows
+      (:func:`read_rows_fp32`); the mesh-sharded dense placement keeps
+      this off.
     """
 
     placement: str
@@ -129,6 +137,7 @@ class LookupPlan:
     row_stats: bool = False
     table_rows_axis: str | None = None
     build_empty: Callable[[], Any] | None = None
+    supports_overlay: bool = False
 
     @property
     def cell(self) -> tuple[str, str, str]:
@@ -395,7 +404,7 @@ def _dense_factory(cfg, storage: str, kernel: str) -> LookupPlan:
         return LookupPlan(
             placement="dense", storage=storage, kernel=kernel,
             build_table=lambda dense: dense, interp=interp,
-            supports_growth=True,
+            supports_growth=True, supports_overlay=True,
         )
 
     from repro import quant
@@ -422,11 +431,38 @@ def _dense_factory(cfg, storage: str, kernel: str) -> LookupPlan:
         # integer payloads are opaque to autodiff: a dense quantized table
         # is a frozen store (training goes through the tiered write-back)
         table_update="frozen",
-        supports_growth=True,
+        supports_growth=True, supports_overlay=True,
     )
 
 
 register_placement("dense", _dense_factory)
+
+
+def read_rows_fp32(table, rows) -> Any:
+    """Host-side fp32 read of arbitrary rows from any value-table object
+    (dense array, `QuantizedTable`, tiered / sharded-tiered store), with
+    the table's storage rounding applied.  The per-tenant overlay layer
+    (`repro.serving.overlay`) diffs overlay rows against base rows read
+    through this, so a plan only sets ``supports_overlay`` if its table
+    kind is handled here.  Mirrors `repro.memctl.migrate._read_rows` but
+    takes an arbitrary row-id array instead of a contiguous range."""
+    import numpy as np
+
+    rows = np.asarray(rows, np.int64).reshape(-1)
+    if is_store(table):
+        payload, scales = table._read_rows_raw(rows)
+        if scales is None:
+            return np.asarray(payload, np.float32)
+        from repro import quant
+
+        return quant.dequantize_rows_np(payload, scales)
+    from repro import quant
+
+    if isinstance(table, quant.QuantizedTable):
+        q = np.asarray(table.q)[rows]
+        scale = np.asarray(table.scale, np.float32)[rows]
+        return quant.dequantize_rows_np(q, scale)
+    return np.asarray(table, np.float32)[rows]
 
 
 def merged_tiered_spec(cfg, storage: str, kernel: str):

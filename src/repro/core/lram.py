@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import nn
-from repro.core import indexing, lattice, lookup, torus
+from repro.core import indexing, lattice, lookup, overlay, torus
 
 
 @dataclasses.dataclass(frozen=True)
@@ -237,8 +237,17 @@ def lram_apply(
     q, scale = torus.torus_map(xh.astype(jnp.float32), spec.K)
     idx, w = indices_and_weights(q, spec, cfg.top_k)
     out = plan.interp(params["values"], idx, w)
+    # per-tenant overlay (serve engine): correct rows the tenant has
+    # overwritten, and record the access for the decode-step writeback.
+    # Trace-time only — `current()` is None outside an engine overlay
+    # context, and jit never re-runs this Python on cached calls.
+    octx = overlay.current()
+    if octx is not None:
+        out = octx.apply(idx, w, out)
     # (..., heads, m)
     out = out * scale
+    if octx is not None:
+        octx.record(idx, w, out)
     y = out.reshape(*lead, cfg.out_dim).astype(x.dtype)
     if return_access:
         return y, new_state, (idx, w)

@@ -1,0 +1,132 @@
+"""Trace-time per-tenant overlay hook for the LRAM lookup.
+
+The serve engine gives every decode slot a *fixed-shape* overlay pack —
+the tenant's sparse copy-on-write rows resolved against the shared base
+table (`repro.serving.overlay.OverlayManager`):
+
+  * ``ids``    (L, B, C) int32  — overlay row ids per lram layer / slot,
+    ``-1`` = empty (lattice row ids are always >= 0, so a sentinel can
+    never match a real lookup index).
+  * ``deltas`` (L, B, C, m) fp32 — ``dequant(overlay_row) - base_row``
+    per packed id, i.e. exactly what the lookup result is missing when it
+    gathered the base row instead of the tenant's row.
+
+`lram_apply` consults :func:`current` between its gather and its scale:
+when a context is active it adds ``Σ_k w_k · delta[idx_k]`` (an exact
+overlay-before-base read, linearly composed), and optionally records the
+post-scale per-head output so the engine can write the step back into the
+tenant's overlay.  An all-empty pack contributes exactly ``0.0``, so an
+engine with overlays enabled but no tenant attached is bit-identical to
+the overlay-free engine.
+
+The context is activated *inside* the engine's jitted step functions —
+``jax.jit`` runs the wrapped Python once per trace, so the module-level
+state below is consulted only at trace time, and the packs (traced jit
+arguments) are baked into the compiled graph as inputs.  Attach/detach
+then only mutates the host-side pack arrays: zero recompilation across
+admit/retire.  Layers consume pack slices in `transformer.layer_plan`
+order via a plain Python counter, which is deterministic per trace.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax.numpy as jnp
+
+_ACTIVE: "OverlayContext | None" = None
+
+
+def current() -> "OverlayContext | None":
+    """The active overlay context (None outside an `activate` block)."""
+    return _ACTIVE
+
+
+def delta_correction(idx, w, ids, deltas):
+    """``Σ_k w_k · delta[idx_k]`` with the delta rows gathered from a
+    fixed-shape pack: exact-integer match of each lookup index against the
+    pack's ids (no match -> an all-zero delta row).
+
+    idx/w: (B, *lead, H, K); ids: (B, C); deltas: (B, C, m).
+    Returns (B, *lead, H, m), fp32.
+    """
+    bcast = (ids.shape[0],) + (1,) * (idx.ndim - 1) + (ids.shape[-1],)
+    hit = idx[..., None] == ids.reshape(bcast)          # (B, ..., K, C)
+    rows = jnp.einsum(
+        "b...c,bcm->b...m", hit.astype(deltas.dtype), deltas
+    )                                                   # (B, ..., K, m)
+    return jnp.einsum("...k,...km->...m", w.astype(rows.dtype), rows)
+
+
+class OverlayContext:
+    """One trace's overlay state: packs + the layer-consumption counter."""
+
+    def __init__(self, ids, deltas, *, collect: bool = False):
+        ids = jnp.asarray(ids)
+        deltas = jnp.asarray(deltas)
+        if ids.ndim != 3 or deltas.ndim != 4 \
+                or ids.shape != deltas.shape[:3]:
+            raise ValueError(
+                f"overlay packs must be ids (L, B, C) and deltas "
+                f"(L, B, C, m); got {ids.shape} / {deltas.shape}"
+            )
+        self.ids = ids
+        self.deltas = deltas
+        self.collect = collect
+        self._layer = 0
+        self._accesses: list[tuple] = []
+
+    @property
+    def num_layers(self) -> int:
+        return int(self.ids.shape[0])
+
+    def apply(self, idx, w, out):
+        """Correct one lram layer's interpolation output (pre-scale),
+        consuming the next pack slice in trace order."""
+        layer = self._layer
+        if layer >= self.num_layers:
+            raise RuntimeError(
+                f"overlay packs cover {self.num_layers} lram layer(s) but "
+                f"the model traced lookup #{layer + 1} — the engine's "
+                f"layer count is stale"
+            )
+        self._layer += 1
+        return out + delta_correction(
+            idx, w, self.ids[layer], self.deltas[layer]
+        )
+
+    def record(self, idx, w, y):
+        """Collect one layer's (indices, weights, post-scale per-head
+        output) for the engine's decode-step writeback."""
+        if self.collect:
+            self._accesses.append((idx, w, y))
+
+    def stacked(self):
+        """The collected accesses stacked with a leading layer axis:
+        (idx (L, ...), w (L, ...), y (L, ...))."""
+        if len(self._accesses) != self.num_layers:
+            raise RuntimeError(
+                f"collected {len(self._accesses)} lram accesses for "
+                f"{self.num_layers} overlay layer(s)"
+            )
+        return tuple(
+            jnp.stack([a[i] for a in self._accesses])
+            for i in range(3)
+        )
+
+
+@contextlib.contextmanager
+def activate(ids, deltas, *, collect: bool = False):
+    """Activate an overlay context for the duration of one model trace.
+
+    Must wrap the model call *inside* the jitted function, so the packs
+    are traced arguments and the context only steers tracing."""
+    global _ACTIVE
+    if _ACTIVE is not None:
+        raise RuntimeError("overlay contexts do not nest")
+    ctx = OverlayContext(ids, deltas, collect=collect)
+    _ACTIVE = ctx
+    try:
+        yield ctx
+    finally:
+        _ACTIVE = None

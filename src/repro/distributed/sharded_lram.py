@@ -618,6 +618,10 @@ def _sharded_tiered_factory(cfg, storage: str,
         build_empty=lambda: ShardedTieredStore(
             cfg.num_locations, cfg.m, spec, num_ranges
         ),
+        # single-process row-range store: base rows are host-readable, so
+        # the per-tenant overlay composes (the mesh-sharded dense plan
+        # above stays overlay-free: its rows live in device shards)
+        supports_overlay=True,
     )
 
 

@@ -27,6 +27,14 @@ overrides the lookup placement, and `--hbm-budget-mb` / `--spill-at-tick`
 attach a MemoryController that migrates a dense table to the tiered store
 live, between decode ticks, without dropping in-flight requests.
 
+Per-tenant memory (`repro.serving.overlay`, docs/serving.md): `--tenants N`
+assigns trace requests to a pool of N tenants and `--overlay-rows K` gives
+each tenant a K-row copy-on-write overlay per lram layer over the shared
+base table — attached at admission, written back every decode tick,
+retired with the slot, zero recompilation.  `--overlay-ttl` /
+`--overlay-budget-kb` add lifecycle enforcement through the controller,
+and `--overlay-dir` persists overlays beside the checkpoint shards.
+
 `--json` emits one machine-readable summary document whose `rows` mirror
 the benchmark harness columns (name, us_per_call, derived — the schema
 `benchmarks/run.py --json` shares; see `benchmarks.run.validate_summary`),
@@ -38,6 +46,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 
 import jax
 import numpy as np
@@ -89,6 +98,26 @@ def build_argparser() -> argparse.ArgumentParser:
     p.add_argument("--spill-at-tick", type=int, default=-1,
                    help="deterministically spill dense->tiered at this "
                         "decode tick (demo/testing trigger)")
+    p.add_argument("--tenants", type=int, default=0,
+                   help="assign each trace request a tenant id from a pool "
+                        "of this size (per-tenant memory overlays; 0 = "
+                        "anonymous trace)")
+    p.add_argument("--overlay-rows", type=int, default=0,
+                   help="per-tenant overlay capacity in rows per lram "
+                        "layer (0 = off; defaults to 8 when --tenants > 0)")
+    p.add_argument("--overlay-write-lr", type=float, default=0.1,
+                   help="decode-step Hebbian writeback rate into the "
+                        "tenant overlay")
+    p.add_argument("--overlay-ttl", type=int, default=0,
+                   help="expire a detached tenant overlay after this many "
+                        "idle decode ticks (0 = never)")
+    p.add_argument("--overlay-budget-kb", type=float, default=0.0,
+                   help="total overlay byte budget; LRU detached tenants "
+                        "are offloaded beyond it (0 = unlimited)")
+    p.add_argument("--overlay-dir", default="",
+                   help="persist tenant overlays here (and spill/restore "
+                        "through it); defaults to <--ckpt-dir>/overlays "
+                        "when a checkpoint dir is given")
     p.add_argument("--json", action="store_true",
                    help="emit a machine-readable summary (benchmark-harness "
                         "row format + per-step latency + cache hit-rates)")
@@ -123,13 +152,26 @@ def main(argv=None):
         params, state = restored["params"], restored["model_state"]
         print(json.dumps({"restored_step": step}))
 
+    overlay_rows = args.overlay_rows
+    if overlay_rows == 0 and args.tenants > 0:
+        overlay_rows = 8
+    overlay_dir = args.overlay_dir
+    if not overlay_dir and args.ckpt_dir and overlay_rows > 0:
+        overlay_dir = os.path.join(args.ckpt_dir, "overlays")
+
     controller = None
-    if args.hbm_budget_mb > 0 or args.spill_at_tick >= 0:
+    if (args.hbm_budget_mb > 0 or args.spill_at_tick >= 0
+            or args.overlay_ttl > 0 or args.overlay_budget_kb > 0):
         controller = memctl.MemoryController(memctl.LifecyclePolicy(
             hbm_budget_bytes=(int(args.hbm_budget_mb * 2**20)
                               if args.hbm_budget_mb > 0 else None),
             spill_at_tick=(args.spill_at_tick
                            if args.spill_at_tick >= 0 else None),
+            tenant_ttl_ticks=(args.overlay_ttl
+                              if args.overlay_ttl > 0 else None),
+            tenant_budget_bytes=(int(args.overlay_budget_kb * 1024)
+                                 if args.overlay_budget_kb > 0 else None),
+            overlay_spill_dir=overlay_dir or None,
         ))
 
     num_requests = (2 * args.batch if args.requests is None
@@ -141,13 +183,23 @@ def main(argv=None):
         max_gen=args.gen,
         rate=args.rate,
         mixed=not args.fixed_len,
+        tenants=args.tenants,
     )
     engine = ServeEngine(params, state, cfg, EngineConfig(
         slots=args.batch,
         max_len=args.prompt_len + args.gen,
         mode=args.mode,
+        overlay_rows=overlay_rows,
+        overlay_write_lr=args.overlay_write_lr,
     ), controller=controller)
+    if engine.overlays is not None and overlay_dir:
+        engine.overlays.spill_dir = overlay_dir
+        restored_overlays = engine.overlays.load_all(overlay_dir)
+        if restored_overlays:
+            print(json.dumps({"restored_overlays": restored_overlays}))
     report = engine.run(trace)
+    if engine.overlays is not None and overlay_dir:
+        engine.overlays.save_all(overlay_dir)
     if controller is not None and controller.events:
         print(json.dumps({"lifecycle": controller.events}))
 
@@ -164,6 +216,10 @@ def main(argv=None):
         }
         if report.cache:
             rec["cache_hit_rate"] = report.cache["hit_rate"]
+        if report.overlay:
+            rec["overlay"] = {k: report.overlay[k] for k in
+                              ("tenants", "hit_rate", "bytes_per_tenant",
+                               "writebacks")}
         print(json.dumps(rec))
     return report
 

@@ -65,6 +65,15 @@ class LifecyclePolicy:
     hbm_budget_bytes: int | None = None        # serve: spill dense beyond
     spill_at_tick: int | None = None           # serve: deterministic spill
     spill_tiered: Any = None                   # TieredSpec for the spill
+    # per-tenant memory overlays (repro.serving.overlay): enforced on the
+    # same tick against the engine's OverlayManager.  Detached tenants
+    # idle for `tenant_ttl_ticks` expire; when total overlay bytes exceed
+    # `tenant_budget_bytes`, least-recently-used detached tenants are
+    # offloaded.  With `overlay_spill_dir` both paths spill to host .npz
+    # (restored transparently on next attach) instead of dropping.
+    tenant_ttl_ticks: int | None = None
+    tenant_budget_bytes: int | None = None
+    overlay_spill_dir: str | None = None
 
 
 def _default_spill_spec(num_locations: int):
@@ -152,11 +161,30 @@ class MemoryController:
                 and self._table_device_bytes(engine.cfg)
                 > pol.hbm_budget_bytes)
 
+    def _overlay_tick(self, engine) -> None:
+        """Enforce per-tenant overlay TTL / byte budget against the
+        engine's OverlayManager (attached tenants are never touched, so
+        in-flight requests ride through)."""
+        pol = self.policy
+        if pol.tenant_ttl_ticks is None and pol.tenant_budget_bytes is None:
+            return
+        manager = getattr(engine, "overlays", None)
+        if manager is None:
+            return
+        self.events.extend(manager.enforce(
+            tick=engine.ticks,
+            ttl_ticks=pol.tenant_ttl_ticks,
+            budget_bytes=pol.tenant_budget_bytes,
+            spill_dir=pol.overlay_spill_dir,
+        ))
+
     def on_tick(self, engine) -> bool:
         """Between-decode-ticks hook: spill a dense memory table that has
-        outgrown its HBM budget to the tiered store.  Returns True when
-        the engine's model was swapped (the caller refreshes its cached
-        store-stat baseline)."""
+        outgrown its HBM budget to the tiered store, and enforce the
+        per-tenant overlay lifecycle.  Returns True when the engine's
+        model was swapped (the caller refreshes its cached store-stat
+        baseline)."""
+        self._overlay_tick(engine)
         if self._spilled or engine.cfg.lram is None:
             return False
         if not (self.policy.hbm_budget_bytes is not None

@@ -35,6 +35,8 @@ repro.memstore.store / repro.quant).
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -42,6 +44,18 @@ from jax.experimental import io_callback
 
 from repro.core import lookup
 from repro.memstore.store import TieredValueStore
+
+
+# On few-core CPU hosts, force synchronous dispatch.  io_callback bodies run
+# on the CPU client's executor threads; with async dispatch, materialising the
+# callback's own operands (np.asarray(idx)) waits on a device_put that needs
+# the very thread the callback occupies — a hard deadlock when the pool has no
+# spare thread (reproduced on 1-cpu hosts: jit(grad) of tiered_interp never
+# returns).  The flag is latched when the CPU client is built, so it must be
+# set at import time — before the first jax computation — and it only affects
+# the cpu backend, so setting it under an accelerator is harmless.
+if (os.cpu_count() or 1) <= 2:
+    jax.config.update("jax_cpu_enable_async_dispatch", False)
 
 
 def tiered_interp(store, idx: jax.Array, w: jax.Array) -> jax.Array:
@@ -136,6 +150,7 @@ def _tiered_factory(cfg, storage: str, kernel: str) -> lookup.LookupPlan:
         build_empty=lambda: TieredValueStore(
             cfg.num_locations, cfg.m, spec
         ),
+        supports_overlay=True,
     )
 
 

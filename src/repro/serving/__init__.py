@@ -11,6 +11,9 @@ Public surface:
   * `EngineReport`, `FinishedRequest` — machine-readable results
     (`EngineReport.summary()` is the `launch.serve --json` document;
     `.rows()` is the benchmark-harness row format).
+  * `TenantOverlay`, `OverlayManager` — per-tenant copy-on-write memory
+    overlays over the shared base table (docs/serving.md): attached at
+    admission, written back every decode tick, retired with the slot.
 
 `repro.launch.serve` is the CLI over this package; design narrative in
 docs/serving.md.
@@ -23,15 +26,18 @@ from repro.serving.engine import (
     ServeEngine,
     serve_requests,
 )
+from repro.serving.overlay import OverlayManager, TenantOverlay
 from repro.serving.requests import Request, RequestQueue, synthetic_trace
 
 __all__ = [
     "EngineConfig",
     "EngineReport",
     "FinishedRequest",
+    "OverlayManager",
     "Request",
     "RequestQueue",
     "ServeEngine",
+    "TenantOverlay",
     "serve_requests",
     "synthetic_trace",
 ]

@@ -49,8 +49,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lookup
+from repro.core import overlay as overlay_ctx
 from repro.models import transformer
 from repro.models.config import ModelConfig
+from repro.serving.overlay import OverlayManager
 from repro.serving.requests import Request, RequestQueue
 
 _STAT_KEYS = ("hits", "misses", "uncached")
@@ -63,12 +65,19 @@ class EngineConfig:
     slots: int = 4
     max_len: int = 64           # per-slot cache length (prompt + generation)
     mode: str = "continuous"    # continuous | static (gang admission)
+    # per-tenant memory overlays (repro.serving.overlay): capacity in
+    # overlay rows per slot per lram layer; 0 disables the subsystem
+    # entirely (the legacy jitted steps, byte-identical code paths)
+    overlay_rows: int = 0
+    overlay_write_lr: float = 0.1   # decode-step Hebbian writeback rate
 
     def __post_init__(self):
         if self.slots < 1:
             raise ValueError("need at least one slot")
         if self.mode not in ("continuous", "static"):
             raise ValueError(f"unknown mode {self.mode!r}")
+        if self.overlay_rows < 0:
+            raise ValueError("overlay_rows must be >= 0")
 
 
 @dataclasses.dataclass
@@ -135,6 +144,7 @@ class EngineReport:
     prefill_s: list[float]
     requests: list[FinishedRequest]
     cache: dict[str, Any] | None
+    overlay: dict[str, Any] | None = None   # OverlayManager.summary()
 
     @property
     def tokens_per_sec(self) -> float:
@@ -153,7 +163,7 @@ class EngineReport:
         us_per_tok = (1e6 * self.wall_s / self.generated_tokens
                       if self.generated_tokens else 0.0)
         hit = (f"hit={self.cache['hit_rate']}" if self.cache else "dense")
-        return [
+        rows = [
             [f"{prefix}_prefill", round(med_prefill, 3),
              f"n={len(self.prefill_s)}"],
             [f"{prefix}_decode_step", round(med_step, 3),
@@ -162,6 +172,15 @@ class EngineReport:
              f"tokens_per_sec={self.tokens_per_sec:.1f} "
              f"requests={len(self.requests)} mode={self.mode}"],
         ]
+        if self.overlay:
+            o = self.overlay
+            rows.append([
+                f"{prefix}_overlay", 0.0,
+                f"tenants={o['tenants']} hit_rate={o['hit_rate']} "
+                f"bytes_per_tenant={o['bytes_per_tenant']} "
+                f"writebacks={o['writebacks']}",
+            ])
+        return rows
 
     def summary(self, arch: str) -> dict[str, Any]:
         """The `--json` summary document (schema shared with benchmarks)."""
@@ -176,6 +195,7 @@ class EngineReport:
             "tokens_per_sec": round(self.tokens_per_sec, 2),
             "generated_tokens": self.generated_tokens,
             "cache": self.cache,
+            "overlay": self.overlay,
             "requests": [r.summary() for r in self.requests],
         }
 
@@ -203,6 +223,27 @@ class ServeEngine:
         self.engine_cfg = engine_cfg
         self.controller = controller
         self.ticks = 0  # decode ticks since construction (policy clock)
+        # per-tenant overlays: validated against the lookup plan's
+        # capability flag, like prefetch — not isinstance probing
+        self.overlays: OverlayManager | None = None
+        if engine_cfg.overlay_rows > 0:
+            plans = lookup.model_plans(cfg)
+            if not plans:
+                raise ValueError(
+                    f"overlay_rows needs a memory arch; {cfg.name} has no "
+                    f"LRAM layer"
+                )
+            if not plans[0].supports_overlay:
+                raise ValueError(
+                    f"lookup plan {plans[0]!r} does not support per-tenant "
+                    f"overlays"
+                )
+            self.overlays = OverlayManager(
+                num_layers=len(cfg.lram_layers), m=cfg.lram.m,
+                storage=plans[0].storage, slots=engine_cfg.slots,
+                rows=engine_cfg.overlay_rows,
+                write_lr=engine_cfg.overlay_write_lr,
+            )
         self._axes = transformer.cache_batch_axes(cfg, engine_cfg.max_len)
         self.cache = transformer.init_cache(
             cfg, engine_cfg.slots, engine_cfg.max_len
@@ -233,26 +274,91 @@ class ServeEngine:
         )
         # CPU has no buffer donation; donating there only logs warnings
         donate = () if jax.default_backend() == "cpu" else (2,)
-        self._decode = jax.jit(
-            lambda tok, pos, cache: transformer.decode_step(
-                params, state, tok, pos, cache, cfg
-            ),
-            donate_argnums=donate,
-        )
+        if self.overlays is None:
+            self._decode = jax.jit(
+                lambda tok, pos, cache: transformer.decode_step(
+                    params, state, tok, pos, cache, cfg
+                ),
+                donate_argnums=donate,
+            )
+            # jit specializes per tokens shape, so bucketing alone bounds
+            # the number of prefill compilations
+            self._prefill = jax.jit(
+                lambda tokens: transformer.prefill(
+                    params, state, {"tokens": tokens}, cfg,
+                    self.engine_cfg.max_len
+                )
+            )
+        else:
+            # the overlay context wraps the model call *inside* jit: the
+            # packs are traced arguments with fixed shapes, so slot
+            # attach/detach only mutates host arrays — the decode step
+            # still compiles exactly once.  Pack args ride behind the
+            # cache, keeping donate_argnums=(2,) valid.
+            def _decode_fn(tok, pos, cache, ids, deltas):
+                with overlay_ctx.activate(
+                    ids, deltas, collect=True
+                ) as octx:
+                    logits, new_cache = transformer.decode_step(
+                        params, state, tok, pos, cache, cfg
+                    )
+                    access = octx.stacked()
+                return logits, new_cache, access
+
+            def _prefill_fn(tokens, ids, deltas):
+                with overlay_ctx.activate(ids, deltas):
+                    return transformer.prefill(
+                        params, state, {"tokens": tokens}, cfg,
+                        self.engine_cfg.max_len
+                    )
+
+            self._decode = jax.jit(_decode_fn, donate_argnums=donate)
+            self._prefill = jax.jit(_prefill_fn)
+            self._bind_overlay_reader()
         self._write_slot = jax.jit(
             lambda cache, sub, slot: transformer.write_cache_slot(
                 cache, sub, slot, self._axes
             ),
             donate_argnums=() if not donate else (0,),
         )
-        # jit specializes per tokens shape, so bucketing alone bounds the
-        # number of prefill compilations
-        self._prefill = jax.jit(
-            lambda tokens: transformer.prefill(
-                params, state, {"tokens": tokens}, cfg,
-                self.engine_cfg.max_len
-            )
-        )
+
+    def _bind_overlay_reader(self) -> None:
+        """Point the overlay manager at the current params' base tables
+        (re-bound on every swap_model, so live migrations keep overlay
+        deltas consistent with wherever the rows now live)."""
+        cfg, params = self.cfg, self.params
+        tables = []
+        for si, seg in enumerate(transformer.layer_plan(cfg)):
+            if seg[0] == "memory" and seg[2] == "lram":
+                tables.append(
+                    params["segments"][f"seg{si}"]["memffn"]["lram"]["values"]
+                )
+        host: dict[int, Any] = {}  # device tables snapshot once per swap
+
+        def read(layer: int, rows) -> np.ndarray:
+            table = tables[layer]
+            rows = np.asarray(rows, np.int64).reshape(-1)
+            if lookup.is_store(table):
+                return lookup.read_rows_fp32(table, rows)
+            cached = host.get(layer)
+            if cached is None:
+                from repro.quant import QuantizedTable
+
+                if isinstance(table, QuantizedTable):
+                    cached = (np.asarray(table.q),
+                              np.asarray(table.scale, np.float32))
+                else:
+                    cached = np.asarray(table, np.float32)
+                host[layer] = cached
+            if isinstance(cached, tuple):
+                from repro import quant
+
+                return quant.dequantize_rows_np(
+                    cached[0][rows], cached[1][rows]
+                )
+            return cached[rows]
+
+        self.overlays.set_base_reader(read)
 
     # ------------------------------------------------------------ internals
 
@@ -263,7 +369,8 @@ class ServeEngine:
                 out[k] += store.stats[k]
         return out
 
-    def _admit(self, req: Request, now: float) -> tuple[_Slot, Any]:
+    def _admit(self, req: Request, now: float,
+               slot_index: int) -> tuple[_Slot, Any]:
         """Prefill one request and splice it into the slotted cache."""
         s = req.prompt_len
         budget = self.engine_cfg.max_len - s
@@ -286,7 +393,20 @@ class ServeEngine:
         tokens = np.zeros((1, bucket), np.int32)
         tokens[0, :s] = req.prompt
         t0 = time.perf_counter()
-        logits, sub_cache = self._prefill(jnp.asarray(tokens))
+        if self.overlays is None:
+            logits, sub_cache = self._prefill(jnp.asarray(tokens))
+        else:
+            # bind the request's tenant before prefill so the prompt
+            # already reads through the tenant's overlay rows; the
+            # batch=1 pack slice has a constant shape across slots
+            self.overlays.attach(slot_index, req.tenant_id,
+                                 tick=self.ticks)
+            b = slot_index
+            logits, sub_cache = self._prefill(
+                jnp.asarray(tokens),
+                jnp.asarray(self.overlays.ids[:, b:b + 1]),
+                jnp.asarray(self.overlays.deltas[:, b:b + 1]),
+            )
         first_logits = np.asarray(logits[0, s - 1])
         prefill_s = time.perf_counter() - t0
         first_tok = int(np.argmax(first_logits))
@@ -347,7 +467,7 @@ class ServeEngine:
                     req = queue.pop_ready(now)
                     if req is None:
                         break
-                    slot, sub_cache = self._admit(req, now)
+                    slot, sub_cache = self._admit(req, now, b)
                     self.cache = self._write_slot(
                         self.cache, sub_cache, jnp.int32(b)
                     )
@@ -361,6 +481,8 @@ class ServeEngine:
                     now = time.perf_counter() - t0
                     if self._done(slot):  # 1-token budget: no decode steps
                         finished.append(self._finish(slot, now))
+                        if self.overlays is not None:
+                            self.overlays.detach(b)
                         continue
                     slots[b] = slot
                     tok_buf[b, 0] = slot.generated[-1]
@@ -376,12 +498,31 @@ class ServeEngine:
 
             # -- one fixed-shape decode tick over the whole pool
             t_step = time.perf_counter()
-            logits, self.cache = self._decode(
-                jnp.asarray(tok_buf), jnp.asarray(pos_buf), self.cache
-            )
+            if self.overlays is None:
+                logits, self.cache = self._decode(
+                    jnp.asarray(tok_buf), jnp.asarray(pos_buf), self.cache
+                )
+                access = None
+            else:
+                logits, self.cache, access = self._decode(
+                    jnp.asarray(tok_buf), jnp.asarray(pos_buf), self.cache,
+                    jnp.asarray(self.overlays.ids),
+                    jnp.asarray(self.overlays.deltas),
+                )
             next_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
             step_s.append(time.perf_counter() - t_step)
             self.ticks += 1
+
+            # decode-step writeback: fold this tick's lattice accesses
+            # into each active slot's tenant overlay (the packs refresh
+            # in place, taking effect from the next tick)
+            if access is not None:
+                idx_a, w_a, y_a = (np.asarray(a) for a in access)
+                for b in active:
+                    self.overlays.writeback(
+                        b, idx_a[:, b, 0], w_a[:, b, 0], y_a[:, b, 0],
+                        tick=self.ticks,
+                    )
 
             # per-request attribution of this tick's cache-stat deltas
             if self.stores:
@@ -413,6 +554,8 @@ class ServeEngine:
                 if self._done(sl):
                     finished.append(self._finish(sl, now))
                     slots[b] = None
+                    if self.overlays is not None:
+                        self.overlays.detach(b)  # retire frees the overlay
 
         wall = time.perf_counter() - t0
         cache_summary = None
@@ -437,6 +580,8 @@ class ServeEngine:
             prefill_s=prefill_s,
             requests=finished,
             cache=cache_summary,
+            overlay=(self.overlays.summary()
+                     if self.overlays is not None else None),
         )
 
 

@@ -23,6 +23,8 @@ class Request:
     prompt: np.ndarray          # (S,) int32 token ids, S >= 1
     max_new_tokens: int         # number of tokens to generate (>= 1)
     arrival_s: float = 0.0      # seconds since trace start
+    tenant_id: str | None = None  # per-tenant memory overlay key
+    #                               (None = anonymous: base table only)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -45,6 +47,7 @@ def synthetic_trace(
     max_gen: int,
     rate: float = 0.0,
     mixed: bool = True,
+    tenants: int = 0,
 ) -> list[Request]:
     """Mixed-length request trace with Poisson arrivals.
 
@@ -53,7 +56,11 @@ def synthetic_trace(
     where continuous batching beats the fixed-batch loop.  `mixed=False`
     pins every request to (max_prompt, max_gen), reproducing the legacy
     fixed-shape workload.  `rate` is the offered load in requests/second;
-    0 means every request is queued at t=0 (closed loop).
+    0 means every request is queued at t=0 (closed loop).  `tenants > 0`
+    assigns each request a random tenant id from a pool of that size
+    (``"t0".."t{n-1}"``) for the per-tenant memory overlays; 0 keeps the
+    trace anonymous (and draws no extra random numbers, so existing
+    seeded traces are unchanged).
     """
     reqs = []
     t = 0.0
@@ -62,11 +69,13 @@ def synthetic_trace(
             t += float(rng.exponential(1.0 / rate))
         s = int(rng.integers(1, max_prompt + 1)) if mixed else max_prompt
         g = int(rng.integers(1, max_gen + 1)) if mixed else max_gen
+        tenant = f"t{int(rng.integers(0, tenants))}" if tenants > 0 else None
         reqs.append(Request(
             id=i,
             prompt=rng.integers(0, vocab_size, size=(s,)).astype(np.int32),
             max_new_tokens=g,
             arrival_s=t,
+            tenant_id=tenant,
         ))
     return reqs
 

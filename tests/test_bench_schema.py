@@ -80,6 +80,28 @@ def test_serve_json_emitter_shares_the_schema(capsys):
     assert doc["cache"] is not None and "hit_rate" in doc["cache"]
 
 
+def test_baseline_tracks_multitenant_serving_row():
+    """The multi-tenant overlay benchmark row is registered in the
+    committed baseline (presence-only: us=0), so CI fails if the bench
+    stops emitting it."""
+    with open(os.path.join(REPO, "benchmarks", "baseline.json")) as f:
+        baseline = json.load(f)
+    row = next(r for r in baseline["rows"]
+               if r[0] == "serving_multitenant_load0")
+    assert row[1] == 0.0  # presence-only, never latency-gated
+
+
+@pytest.mark.slow
+def test_table8_emits_multitenant_overlay_row():
+    from benchmarks import table8_serving
+
+    rows = table8_serving.run(smoke=True)
+    row = next(r for r in rows if r[0] == "serving_multitenant_load0")
+    assert "overlay_hit_rate=" in row[2]
+    assert "bytes_per_tenant=" in row[2]
+    assert "tenants=" in row[2] and "writebacks=" in row[2]
+
+
 # -------------------------------------------------------------- check_bench
 
 BASE = {"rows": [["hot.gather", 100.0, ""], ["hot.decode", 50.0, ""],
