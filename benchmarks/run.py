@@ -12,6 +12,13 @@ shared contract both emitters and `tools/check_bench.py` check against).
 ``run(smoke=True)`` where the module supports it) — this is what the CI
 ``bench`` job runs before gating on `benchmarks/baseline.json`.
 
+``--metrics-dir DIR`` arms the observability layer (`repro.obs`) for the
+whole sweep: instrumented layers (serving engine, tiered store, lifecycle
+controller, table5's utilisation gauges) stream to ``DIR/metrics.jsonl``
+and a Prometheus textfile snapshot, and the summary document carries the
+final registry snapshot under its ``metrics`` key (``repro.obs.v1`` —
+`tools/check_bench.py` gates on it).
+
 Each module exposes ``run() -> list[(name, us_per_call, derived)]``.
 """
 
@@ -60,6 +67,12 @@ def validate_summary(doc) -> None:
             )
         if not isinstance(derived, str):
             raise ValueError(f"rows[{i}] ({name}): derived must be a string")
+    if "metrics" in doc:
+        from repro.obs import export as obs_export
+        try:
+            obs_export.validate_metrics_doc(doc["metrics"])
+        except ValueError as e:
+            raise ValueError(f"summary 'metrics' doc invalid: {e}") from e
 
 
 def collect(tables: list[str], *, smoke: bool = False):
@@ -98,14 +111,24 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=None, metavar="FILE",
                     help="also write the summary document to FILE "
                          "(e.g. BENCH_ci.json; implies the JSON schema)")
+    ap.add_argument("--metrics-dir", default="", metavar="DIR",
+                    help="arm repro.obs for the sweep: JSONL event log + "
+                         "Prometheus textfile in DIR, registry snapshot "
+                         "in the summary's 'metrics' key")
     args = ap.parse_args(argv)
 
+    from repro import obs
+    if args.metrics_dir:
+        obs.configure(metrics_dir=args.metrics_dir)
     rows, failures = collect(args.tables, smoke=args.smoke)
+    if args.metrics_dir:
+        obs.flush()
     doc = {
         "rows": [[name, us, derived] for name, us, derived in rows],
         "tables": args.tables or list(MODULES),
         "smoke": args.smoke,
         "failures": failures,
+        "metrics": obs.metrics_doc(),
     }
     validate_summary(doc)
     if args.out:

@@ -4,35 +4,61 @@ Runs MLM inference through a (briefly trained) LRAM model with
 `collect_access=True`: the weighted access histogram of the value table is
 accumulated from the REAL mid-network query stream — the paper's exact
 measurement (>98% of slots touched; KL ~ 1.6-2.5 nats).
+
+The access stream also feeds the jit-safe usage counters
+(`repro.memctl.telemetry`, the same device-side segment-sum the
+`--telemetry` train step carries), so the hot/cold/dead utilisation rows
+ride the benchmark output — and, when the observability layer is armed
+(`--metrics-dir`, or `benchmarks.run --metrics-dir`), land in the JSONL
+event log and Prometheus textfile through `repro.obs`.
+
+    PYTHONPATH=src python -m benchmarks.run table5 --smoke
+    PYTHONPATH=src python -m benchmarks.table5_utilisation --smoke \
+        --metrics-dir /tmp/bench-metrics
 """
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs, data, optim
+from repro import configs, data, memctl, obs, optim
 from repro.launch.train import build_train_step
 from repro.models import transformer
 
 TRAIN_STEPS = 60
+SMOKE_TRAIN_STEPS = 12
+SMOKE_BATCHES = 6
 
 
 def _utilisation(cfg, params, state, dcfg, *, batches=24):
+    """(used_frac, kl, telemetry) from the real mid-network access stream.
+
+    The per-location histogram (float64, host) reproduces the paper's
+    numbers; the telemetry pytree accumulates the same indices through
+    `memctl.telemetry_update` inside jit — the device-side counter path
+    the hot/cold/dead rows come from.
+    """
     n = cfg.lram.num_locations
     hist = np.zeros(n, np.float64)
+    tel = memctl.telemetry_init(n)
 
     @jax.jit
-    def probe(batch):
+    def probe(batch, tel):
         _, _, _, acc = transformer.forward(
             params, state, batch, cfg, collect_access=True
         )
-        return acc
+        for idx, _w in acc.values():
+            tel = memctl.telemetry_update(tel, idx)
+        return acc, tel
 
     for i in range(batches):
         batch = jax.tree.map(
             jnp.asarray, data.get_batch(dcfg, step=5_000_000 + i)
         )
-        acc = probe(batch)
+        acc, tel = probe(batch, tel)
         for idx, w in acc.values():
             np.add.at(hist, np.asarray(idx).reshape(-1),
                       np.asarray(w, dtype=np.float64).reshape(-1))
@@ -40,29 +66,41 @@ def _utilisation(cfg, params, state, dcfg, *, batches=24):
     p = hist / max(hist.sum(), 1e-12)
     nz = p[p > 0]
     kl = float((nz * np.log(nz * hist.size)).sum())
-    return used, kl
+    return used, kl, jax.device_get(tel)
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False):
     cfg = configs.get_smoke_config("lram-bert-small")
     dcfg = data.DataConfig(
         vocab_size=cfg.vocab_size, seq_len=64, global_batch=64,
         kind="facts", objective="mlm",
     )
     params, state = transformer.init(jax.random.PRNGKey(0), cfg)
-    used0, kl0 = _utilisation(cfg, params, state, dcfg, batches=8)
+    used0, kl0, _ = _utilisation(cfg, params, state, dcfg, batches=8)
 
     # brief training (the paper measures a trained model)
     opt_cfg = optim.OptimConfig(lr=3e-4, memory_lr_mult=10.0)
     step_fn = build_train_step(cfg, opt_cfg)
     opt_state = optim.adam_init(params)
     resid = jnp.zeros(())
-    for step in range(TRAIN_STEPS):
+    for step in range(SMOKE_TRAIN_STEPS if smoke else TRAIN_STEPS):
         batch = jax.tree.map(jnp.asarray, data.get_batch(dcfg, step=step))
         params, opt_state, state, resid, _ = step_fn(
             params, opt_state, state, resid, batch
         )
-    used1, kl1 = _utilisation(cfg, params, state, dcfg)
+    used1, kl1, tel = _utilisation(
+        cfg, params, state, dcfg,
+        batches=SMOKE_BATCHES if smoke else 24,
+    )
+
+    # hot/cold/dead rows from the drained device counters, mirrored into
+    # the obs registry (no-ops unless a caller armed it)
+    util_rows = memctl.utilisation_report(tel, prefix="table5.util")
+    s = memctl.utilisation_summary(tel)
+    obs.gauge("table5.util_dead_frac").set(s["dead_frac"])
+    obs.gauge("table5.util_hot_mass").set(s["hot_mass"])
+    obs.gauge("table5.util_cold_frac").set(s["cold_frac"])
+    obs.gauge("table5.usage_frac_trained").set(round(used1, 4))
 
     return [
         ("table5.memory_locations", 0.0,
@@ -72,4 +110,38 @@ def run() -> list[tuple[str, float, str]]:
          f"{100*used1:.2f}% of slots touched (paper: 98.5-99.99%)"),
         ("table5.kl_from_uniform_trained", 0.0,
          f"{kl1:.3f} nats (paper: 1.57-2.52; untrained {kl0:.3f})"),
+        *[(name, us, derived) for name, us, derived in util_rows],
     ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep (fewer train steps / probe batches)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the benchmark summary document")
+    ap.add_argument("--metrics-dir", default="",
+                    help="arm repro.obs: utilisation gauges land in "
+                         "<dir>/metrics.jsonl + <dir>/metrics.prom")
+    args = ap.parse_args(argv)
+    if args.metrics_dir:
+        obs.configure(metrics_dir=args.metrics_dir)
+    rows = run(smoke=args.smoke)
+    if args.metrics_dir:
+        obs.flush()
+    if args.json:
+        print(json.dumps({
+            "rows": [[n, us, d] for n, us, d in rows],
+            "tables": ["table5_utilisation"],
+            "smoke": args.smoke,
+            "metrics": obs.metrics_doc(),
+        }))
+    else:
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,17 +18,23 @@ A multi-tenant row rides along: the same closed-loop trace with requests
 spread over a tenant pool and per-tenant memory overlays attached
 (`repro.serving.overlay`), reporting overlay hit-rate and bytes/tenant
 next to the throughput.
+
+An observability-overhead row (`serving_obs_load0`) replays the continuous
+closed-loop trace with the metrics registry and span tracer armed
+(`repro.obs`), so the cost of live telemetry is tracked as its own
+benchmark row instead of silently taxing the metrics-off rows.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import tempfile
 
 import jax
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.models import transformer
 from repro.serving import EngineConfig, ServeEngine, synthetic_trace
 
@@ -97,6 +103,40 @@ def _measure(smoke: bool):
         f"writebacks={o['writebacks']}",
     ))
     tps[("multitenant", 0.0)] = report.tokens_per_sec
+
+    # observability-overhead row: the continuous closed-loop trace again,
+    # now with the metrics registry + span tracer armed (JSONL streaming
+    # to a scratch dir) — the metrics-on serving cost as its own row
+    trace = synthetic_trace(
+        np.random.default_rng(0), num_requests,
+        vocab_size=cfg.vocab_size, max_prompt=MAX_PROMPT,
+        max_gen=max_gen, rate=0.0, mixed=True,
+    )
+    engine = ServeEngine(params, state, cfg, EngineConfig(
+        slots=SLOTS, max_len=MAX_PROMPT + max_gen, mode="continuous",
+    ))
+    was_enabled = obs.enabled()
+    if not was_enabled:
+        obs.configure(metrics_dir=tempfile.mkdtemp(prefix="obs-bench-"))
+    try:
+        engine.run(trace)          # warmup
+        report = engine.run(trace)
+        obs.flush()
+    finally:
+        if not was_enabled:
+            obs.disable()
+    tps[("obs", 0.0)] = report.tokens_per_sec
+    us = 1e6 / report.tokens_per_sec if report.tokens_per_sec else 0.0
+    base = tps[("continuous", 0.0)]
+    overhead = (base / report.tokens_per_sec
+                if report.tokens_per_sec else 0.0)
+    rows.append((
+        "serving_obs_load0", round(us, 3),
+        f"tokens_per_sec={report.tokens_per_sec:.1f} "
+        f"overhead_x={overhead:.3f} vs metrics-off continuous "
+        f"({base:.1f} tok/s) "
+        f"p50_ms={report.p50_ms():.2f} p99_ms={report.p99_ms():.2f}",
+    ))
     return rows, tps
 
 

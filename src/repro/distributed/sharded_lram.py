@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
 from repro.core import lookup
 from repro.distributed import context as _ctx
 from repro.distributed._compat import shard_map
@@ -322,6 +323,7 @@ class ShardedTieredStore:
     def _fanout(self, calls) -> None:
         """Run (fn, kwargs) pairs, overlapped when there is more than one."""
         calls = list(calls)
+        obs.gauge("memstore.prefetch_queue_depth").set(len(calls))
         if len(calls) <= 1:
             for fn, kw in calls:
                 fn(**kw)

@@ -51,7 +51,7 @@ import os
 import jax
 import numpy as np
 
-from repro import configs, memctl
+from repro import configs, memctl, obs
 from repro.checkpoint import CheckpointManager
 from repro.models import transformer
 from repro.serving import EngineConfig, ServeEngine, synthetic_trace
@@ -118,6 +118,13 @@ def build_argparser() -> argparse.ArgumentParser:
                    help="persist tenant overlays here (and spill/restore "
                         "through it); defaults to <--ckpt-dir>/overlays "
                         "when a checkpoint dir is given")
+    p.add_argument("--metrics-dir", default="",
+                   help="arm the observability layer (repro.obs): spans "
+                        "stream to <dir>/metrics.jsonl, a Prometheus "
+                        "textfile snapshot lands at <dir>/metrics.prom")
+    p.add_argument("--profile-dir", default="",
+                   help="jax.profiler capture dir for the serve.run span "
+                        "(needs --metrics-dir)")
     p.add_argument("--json", action="store_true",
                    help="emit a machine-readable summary (benchmark-harness "
                         "row format + per-step latency + cache hit-rates)")
@@ -126,6 +133,9 @@ def build_argparser() -> argparse.ArgumentParser:
 
 def main(argv=None):
     args = build_argparser().parse_args(argv)
+    if args.metrics_dir:
+        obs.configure(metrics_dir=args.metrics_dir,
+                      profile_dir=args.profile_dir or None)
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
 
@@ -202,6 +212,8 @@ def main(argv=None):
         engine.overlays.save_all(overlay_dir)
     if controller is not None and controller.events:
         print(json.dumps({"lifecycle": controller.events}))
+    if args.metrics_dir:
+        obs.flush()
 
     if args.json:
         print(json.dumps(report.summary(cfg.name)))

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import configs, data, memctl, optim
+from repro import configs, data, memctl, obs, optim
 from repro.checkpoint import CheckpointManager
 from repro.core import lookup
 from repro.distributed import fault, sharding
@@ -30,11 +30,38 @@ from repro.launch import mesh as mesh_lib
 from repro.models import transformer
 
 
-def build_train_step(cfg, opt_cfg, mesh=None, compression="none"):
-    def train_step(params, opt_state, model_state, residual, batch):
-        (loss, (new_model_state, metrics)), grads = jax.value_and_grad(
-            transformer.loss_fn, has_aux=True
-        )(params, model_state, batch, cfg, train=True)
+def lram_segments(cfg) -> list[str]:
+    """Segment names of the lram memory layers (telemetry keys)."""
+    return [f"seg{si}" for si, seg in enumerate(transformer.layer_plan(cfg))
+            if seg[0] == "memory" and seg[2] == "lram"]
+
+
+def telemetry_rows_per_bin(num_locations: int, *, max_bins: int = 4096) -> int:
+    """Coarsen per-row counters so the carried pytree stays <= max_bins
+    bins (num_locations is a power of two, so this always divides)."""
+    rpb = 1
+    while num_locations // rpb > max_bins:
+        rpb *= 2
+    return rpb
+
+
+def init_telemetry(cfg):
+    """One usage-counter pytree per lram segment (the carried `tel`)."""
+    n = cfg.lram.num_locations
+    rpb = telemetry_rows_per_bin(n)
+    return {name: memctl.telemetry_init(n, rows_per_bin=rpb)
+            for name in lram_segments(cfg)}
+
+
+def build_train_step(cfg, opt_cfg, mesh=None, compression="none",
+                     telemetry=False):
+    """The jitted step.  With `telemetry=True` the step carries a usage
+    pytree (`tel`, from `init_telemetry`) like optimizer state: the loss
+    runs with `collect_access=True` and each lram segment's access indices
+    are scatter-added into its counters in-graph
+    (`memctl.telemetry_update`) — the only mode that changes the traced
+    computation; the plain step is byte-identical to the pre-obs one."""
+    def _finish(loss, metrics, residual, grads, params, opt_state):
         if compression != "none":
             comp = {"kind": compression, "rho": 0.01, "residual": residual}
             grads, comp = optim.compress_gradients(grads, comp)
@@ -42,20 +69,46 @@ def build_train_step(cfg, opt_cfg, mesh=None, compression="none"):
         new_params, new_opt, stats = optim.adam_update(
             grads, opt_state, params, opt_cfg
         )
-        metrics = {**metrics, **stats, "loss": loss}
-        return new_params, new_opt, new_model_state, residual, metrics
+        return new_params, new_opt, residual, \
+            {**metrics, **stats, "loss": loss}
+
+    if telemetry:
+        def train_step(params, opt_state, model_state, residual, batch,
+                       tel):
+            (loss, (new_model_state, metrics, accesses)), grads = \
+                jax.value_and_grad(transformer.loss_fn, has_aux=True)(
+                    params, model_state, batch, cfg, train=True,
+                    collect_access=True,
+                )
+            tel = {
+                name: (memctl.telemetry_update(t, accesses[name][0])
+                       if name in accesses else t)
+                for name, t in tel.items()
+            }
+            new_params, new_opt, residual, metrics = _finish(
+                loss, metrics, residual, grads, params, opt_state
+            )
+            return (new_params, new_opt, new_model_state, residual,
+                    metrics, tel)
+    else:
+        def train_step(params, opt_state, model_state, residual, batch):
+            (loss, (new_model_state, metrics)), grads = jax.value_and_grad(
+                transformer.loss_fn, has_aux=True
+            )(params, model_state, batch, cfg, train=True)
+            new_params, new_opt, residual, metrics = _finish(
+                loss, metrics, residual, grads, params, opt_state
+            )
+            return new_params, new_opt, new_model_state, residual, metrics
 
     if mesh is None:
         return jax.jit(train_step, donate_argnums=(0, 1))
     pspec = sharding.batch_pspec(mesh)
     batch_sh = NamedSharding(mesh, P(pspec[0] if len(pspec) else None))
-    return jax.jit(
-        train_step,
-        in_shardings=(None, None, None, None,
-                      jax.tree.map(lambda _: batch_sh,
-                                   {"tokens": 0, "labels": 0})),
-        donate_argnums=(0, 1),
-    )
+    batch_in = jax.tree.map(lambda _: batch_sh, {"tokens": 0, "labels": 0})
+    in_sh = (None, None, None, None, batch_in)
+    if telemetry:
+        in_sh = in_sh + (None,)
+    return jax.jit(train_step, in_shardings=in_sh, donate_argnums=(0, 1))
 
 
 def evaluate(params, model_state, cfg, dcfg, *, steps=4):
@@ -101,14 +154,32 @@ def main(argv=None):
                         "grow the value table online at the given steps "
                         "(repro.memctl; e.g. '100:19,500:20')")
     p.add_argument("--simulate-failure-at", type=int, default=-1)
+    p.add_argument("--telemetry", action="store_true",
+                   help="carry in-graph memory-usage counters through the "
+                        "train step and log utilisation_report rows "
+                        "beside the loss (lram archs)")
+    p.add_argument("--metrics-dir", default="",
+                   help="arm the observability layer (repro.obs): spans "
+                        "stream to <dir>/metrics.jsonl, a Prometheus "
+                        "textfile snapshot lands at <dir>/metrics.prom")
+    p.add_argument("--profile-dir", default="",
+                   help="jax.profiler capture dir for marked spans "
+                        "(needs --metrics-dir)")
     p.add_argument("--log-every", type=int, default=10)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--use-mesh", action="store_true",
                    help="shard over all available devices")
     args = p.parse_args(argv)
 
+    if args.metrics_dir:
+        obs.configure(metrics_dir=args.metrics_dir,
+                      profile_dir=args.profile_dir or None)
+
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
+    if args.telemetry and cfg.lram is None:
+        raise SystemExit(f"--telemetry needs a memory arch; {cfg.name} "
+                         f"has no LRAM layer")
     dcfg = data.DataConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.batch, objective=cfg.objective, seed=args.seed,
@@ -189,7 +260,9 @@ def main(argv=None):
                 start_step = step_found
                 print(f"resumed from step {start_step}")
 
-    step_fn = build_train_step(cfg, opt_cfg, mesh, args.compression)
+    step_fn = build_train_step(cfg, opt_cfg, mesh, args.compression,
+                               telemetry=args.telemetry)
+    tel = init_telemetry(cfg) if args.telemetry else None
     monitor = fault.HeartbeatMonitor(num_hosts=jax.process_count())
     timer = fault.StepTimer()
 
@@ -206,8 +279,17 @@ def main(argv=None):
                 # it mirrors params, including any grown dense table)
                 stores = bind_stores(params)
                 step_fn = build_train_step(cfg, opt_cfg, mesh,
-                                           args.compression)
+                                           args.compression,
+                                           telemetry=args.telemetry)
                 residual = init_residual(params)
+                if tel is not None:
+                    # appended bins start dead; the utilisation log then
+                    # shows the post-growth recovery curve directly
+                    tel = {
+                        name: memctl.grow_telemetry(
+                            t, cfg.lram.num_locations
+                        ) for name, t in tel.items()
+                    }
                 ev = controller.events[-1]
                 print(json.dumps({
                     "grow": f"2^{ev['new_log2']}", "step": step,
@@ -221,9 +303,16 @@ def main(argv=None):
             )
         t0 = time.time()
         batch = jax.tree.map(jnp.asarray, data.get_batch(dcfg, step=step))
-        params, opt_state, model_state, residual, metrics = step_fn(
-            params, opt_state, model_state, residual, batch
-        )
+        with obs.span("train.step", step=step):
+            if tel is None:
+                params, opt_state, model_state, residual, metrics = step_fn(
+                    params, opt_state, model_state, residual, batch
+                )
+            else:
+                (params, opt_state, model_state, residual, metrics,
+                 tel) = step_fn(
+                    params, opt_state, model_state, residual, batch, tel
+                )
         dt = time.time() - t0
         timer.record(dt)
         monitor.heartbeat(jax.process_index(), dt)
@@ -241,6 +330,20 @@ def main(argv=None):
                     float(np.mean([s.hit_rate() for _, s in stores])), 4
                 )
             print(json.dumps(rec) + slow)
+            if tel is not None:
+                # hot/cold/dead utilisation beside the loss, one report
+                # row set per lram segment (drained at the log boundary:
+                # the counters themselves stay on device, in-graph)
+                for name, t in tel.items():
+                    rows = memctl.utilisation_report(
+                        t, prefix=f"util_{name}"
+                    )
+                    print(json.dumps({"step": step,
+                                      "utilisation_report": rows}))
+                    s = memctl.utilisation_summary(t)
+                    obs.gauge("train.util_dead_frac").set(s["dead_frac"])
+                    obs.gauge("train.util_hot_mass").set(s["hot_mass"])
+                    obs.gauge("train.util_cold_frac").set(s["cold_frac"])
         if mgr and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
             mgr.save(step + 1,
                      {"params": params, "opt": opt_state,
@@ -258,6 +361,8 @@ def main(argv=None):
     eval_loss, recall = evaluate(params, model_state, cfg, dcfg)
     print(json.dumps({"final_eval_loss": round(eval_loss, 4),
                       "final_fact_recall": round(recall, 4)}))
+    if args.metrics_dir:
+        obs.flush()
     return params
 
 

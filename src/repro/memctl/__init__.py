@@ -39,4 +39,5 @@ from repro.memctl.telemetry import (  # noqa: F401
     telemetry_init,
     telemetry_update,
     utilisation_report,
+    utilisation_summary,
 )

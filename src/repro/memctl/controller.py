@@ -24,8 +24,9 @@ import dataclasses
 import time
 from typing import Any
 
+from repro import obs
 from repro.core import lookup
-from repro.memctl import growth, migrate
+from repro.memctl import growth, migrate, telemetry
 
 
 def parse_grow_at(arg: str) -> tuple[tuple[int, int], ...]:
@@ -105,15 +106,23 @@ class MemoryController:
     def _apply_growth(self, params, model_cfg, opt_state, step: int,
                       new_log2: int):
         new_n = 2 ** new_log2
-        t0 = time.perf_counter()
-        params, model_cfg, opt_state = growth.grow_model(
-            params, model_cfg, new_n, opt_state=opt_state
+        obs.gauge("memctl.num_locations").set(
+            model_cfg.lram.num_locations
         )
+        t0 = time.perf_counter()
+        with obs.span("memctl.grow", step=step, new_log2=new_log2):
+            params, model_cfg, opt_state = growth.grow_model(
+                params, model_cfg, new_n, opt_state=opt_state
+            )
+        pause_s = round(time.perf_counter() - t0, 4)
         self._grown.add((step, new_log2))
         self.events.append({
             "event": "grow", "step": step, "new_log2": new_log2,
-            "pause_s": round(time.perf_counter() - t0, 4),
+            "pause_s": pause_s,
         })
+        obs.gauge("memctl.num_locations").set(new_n)
+        obs.emit_event("memctl.grow", step=step, new_log2=new_log2,
+                       pause_s=pause_s)
         return params, model_cfg, opt_state
 
     def on_train_step(self, step: int, params, model_cfg, opt_state=None):
@@ -171,12 +180,33 @@ class MemoryController:
         manager = getattr(engine, "overlays", None)
         if manager is None:
             return
-        self.events.extend(manager.enforce(
+        new_events = manager.enforce(
             tick=engine.ticks,
             ttl_ticks=pol.tenant_ttl_ticks,
             budget_bytes=pol.tenant_budget_bytes,
             spill_dir=pol.overlay_spill_dir,
-        ))
+        )
+        self.events.extend(new_events)
+        for ev in new_events:
+            obs.emit_event("memctl.overlay", **{
+                k: (v if isinstance(v, (int, float, str, bool)) else str(v))
+                for k, v in ev.items()
+            })
+
+    def _utilisation_gauges(self, engine) -> None:
+        """Refresh memctl.util_* gauges from the stores' own per-shard
+        counters (plans with `row_stats=True`).  Only runs with the
+        registry armed: the summary sorts per-shard counts host-side."""
+        if not obs.enabled():
+            return
+        for _, store in getattr(engine, "stores", []):
+            if not hasattr(store, "row_stats"):
+                continue
+            s = telemetry.utilisation_summary(telemetry.store_telemetry(store))
+            obs.gauge("memctl.util_dead_frac").set(s["dead_frac"])
+            obs.gauge("memctl.util_hot_mass").set(s["hot_mass"])
+            obs.gauge("memctl.util_cold_frac").set(s["cold_frac"])
+            break  # one memory table per model today
 
     def on_tick(self, engine) -> bool:
         """Between-decode-ticks hook: spill a dense memory table that has
@@ -185,6 +215,7 @@ class MemoryController:
         model was swapped (the caller refreshes its cached store-stat
         baseline)."""
         self._overlay_tick(engine)
+        self._utilisation_gauges(engine)
         if self._spilled or engine.cfg.lram is None:
             return False
         if not (self.policy.hbm_budget_bytes is not None
@@ -203,17 +234,29 @@ class MemoryController:
         spec = (self.policy.spill_tiered or lram.tiered
                 or _default_spill_spec(lram.num_locations))
         dst = dataclasses.replace(lram, interp_impl="tiered", tiered=spec)
-        t0 = time.perf_counter()
-        params, model_cfg = migrate.migrate_model(
-            engine.params, engine.cfg, dst
+        obs.gauge("memctl.table_device_bytes").set(
+            self._table_device_bytes(engine.cfg)
         )
-        engine.swap_model(params, model_cfg)
-        for _, store in engine.stores:
-            store.warm()
+        t0 = time.perf_counter()
+        with obs.span("memctl.spill", tick=engine.ticks):
+            params, model_cfg = migrate.migrate_model(
+                engine.params, engine.cfg, dst
+            )
+            engine.swap_model(params, model_cfg)
+            for _, store in engine.stores:
+                store.warm()
+        pause_s = round(time.perf_counter() - t0, 4)
+        # post-spill device footprint is the tiered caches, not the table
+        obs.gauge("memctl.table_device_bytes").set(sum(
+            store.cache_np.nbytes
+            for _, store in engine.stores if hasattr(store, "cache_np")
+        ))
         self._spilled = True
         self.events.append({
             "event": "spill", "tick": engine.ticks,
             "placement": "dense->tiered",
-            "pause_s": round(time.perf_counter() - t0, 4),
+            "pause_s": pause_s,
         })
+        obs.emit_event("memctl.spill", tick=engine.ticks,
+                       placement="dense->tiered", pause_s=pause_s)
         return True

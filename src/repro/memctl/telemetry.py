@@ -107,10 +107,9 @@ def grow_telemetry(tel: Telemetry, new_num_rows: int) -> Telemetry:
     }
 
 
-def utilisation_report(tel: Telemetry, *, prefix: str = "util",
-                       hot_frac: float = 0.1,
-                       cold_quantile: float = 0.5) -> list[list[Any]]:
-    """Hot/cold/dead fractions as benchmark rows.
+def utilisation_summary(tel: Telemetry, *, hot_frac: float = 0.1,
+                        cold_quantile: float = 0.5) -> dict[str, Any]:
+    """Hot/cold/dead utilisation as plain numbers.
 
     * dead — bins never counted (`counts == 0`): capacity earning nothing.
     * hot mass — share of recent traffic (`ema`) landing on the hottest
@@ -118,14 +117,12 @@ def utilisation_report(tel: Telemetry, *, prefix: str = "util",
     * cold — live bins whose `ema` sits below `cold_quantile` of the
       live-bin median: allocated, warm once, barely read now.
 
-    Rows carry `us_per_call = 0.0` — they are derived/analytic rows, which
-    the bench gate (`tools/check_bench.py`) tracks for presence only.
+    The structured form the controller and the obs gauges consume;
+    `utilisation_report` renders the same numbers as benchmark rows.
     """
     counts = np.asarray(tel["counts"], np.float64)
     ema = np.asarray(tel["ema"], np.float64)
     bins = counts.size
-    steps = int(tel["steps"])
-    rpb = int(tel["rows_per_bin"])
     dead = counts == 0
     dead_frac = float(dead.mean()) if bins else 0.0
     total = float(ema.sum())
@@ -137,10 +134,32 @@ def utilisation_report(tel: Telemetry, *, prefix: str = "util",
         cold_frac = float((live < thresh).mean())
     else:
         cold_frac = 0.0
-    meta = f"bins={bins} rows_per_bin={rpb} steps={steps}"
+    return {
+        "bins": bins,
+        "rows_per_bin": int(tel["rows_per_bin"]),
+        "steps": int(tel["steps"]),
+        "dead_frac": round(dead_frac, 4),
+        "hot_frac": hot_frac,
+        "hot_mass": round(hot_mass, 4),
+        "cold_frac": round(cold_frac, 4),
+    }
+
+
+def utilisation_report(tel: Telemetry, *, prefix: str = "util",
+                       hot_frac: float = 0.1,
+                       cold_quantile: float = 0.5) -> list[list[Any]]:
+    """`utilisation_summary` rendered as benchmark rows.
+
+    Rows carry `us_per_call = 0.0` — they are derived/analytic rows, which
+    the bench gate (`tools/check_bench.py`) tracks for presence only.
+    """
+    s = utilisation_summary(tel, hot_frac=hot_frac,
+                            cold_quantile=cold_quantile)
+    meta = (f"bins={s['bins']} rows_per_bin={s['rows_per_bin']} "
+            f"steps={s['steps']}")
     return [
-        [f"{prefix}_dead_frac", 0.0, f"{dead_frac:.4f} {meta}"],
+        [f"{prefix}_dead_frac", 0.0, f"{s['dead_frac']:.4f} {meta}"],
         [f"{prefix}_hot{int(round(hot_frac * 100))}_mass", 0.0,
-         f"{hot_mass:.4f} {meta}"],
-        [f"{prefix}_cold_frac", 0.0, f"{cold_frac:.4f} {meta}"],
+         f"{s['hot_mass']:.4f} {meta}"],
+        [f"{prefix}_cold_frac", 0.0, f"{s['cold_frac']:.4f} {meta}"],
     ]

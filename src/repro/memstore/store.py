@@ -51,13 +51,15 @@ import collections
 import dataclasses
 import os
 import tempfile
+import threading
+import time
 from typing import Iterable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import quant
+from repro import obs, quant
 from repro.core import lookup
 
 
@@ -142,6 +144,13 @@ class TieredValueStore:
         # per-shard access counts (usage telemetry, repro.memctl): unlike
         # `stats`, indexed by shard so dead/hot regions are localizable
         self.shard_access = np.zeros(self.num_shards, np.int64)
+        # guards cache residency + stat counters: fills run on the
+        # prefetch worker pool (ShardedTieredStore fan-out) and lookup
+        # callbacks run on XLA's io_callback threads, so every mutator of
+        # `stats` / LRU / cache mirrors below takes this re-entrant lock.
+        # Readers of individual stat values stay lock-free (a single dict
+        # read is atomic); only read-modify-write needs the guard.
+        self._lock = threading.RLock()
         self.reset_stats()
 
     # ------------------------------------------------------------------ init
@@ -210,14 +219,15 @@ class TieredValueStore:
         self._fill_host(values)
 
     def _invalidate_cache(self) -> None:
-        self._shard_slot[:] = -1
-        self._slot_shard[:] = -1
-        self._lru.clear()
-        self._free = list(range(self.cache_slots - 1, -1, -1))
-        self._dirty.clear()
-        self._dev_stale.clear()
-        self._cache_dev = None
-        self._scale_dev = None
+        with self._lock:
+            self._shard_slot[:] = -1
+            self._slot_shard[:] = -1
+            self._lru.clear()
+            self._free = list(range(self.cache_slots - 1, -1, -1))
+            self._dirty.clear()
+            self._dev_stale.clear()
+            self._cache_dev = None
+            self._scale_dev = None
 
     # ----------------------------------------------------------- addressing
 
@@ -232,31 +242,43 @@ class TieredValueStore:
         current request pinned).  Fills update the host-side cache mirror
         and mark slots for the next batched device sync."""
         pinned = set(int(s) for s in shards)
-        for s in sorted(pinned):
-            if self._shard_slot[s] >= 0:  # hit: touch
-                self._lru.move_to_end(s)
-                continue
-            if self._free:
-                slot = self._free.pop()
-            else:
-                victim = next(
-                    (sh for sh in self._lru if sh not in pinned), None
-                )
-                if victim is None:  # whole cache pinned by this batch
+        t0 = time.perf_counter()
+        fills = evictions = 0
+        with self._lock:
+            for s in sorted(pinned):
+                if self._shard_slot[s] >= 0:  # hit: touch
+                    self._lru.move_to_end(s)
                     continue
-                slot = self._lru.pop(victim)
-                self._writeback_slot(slot)
-                self._shard_slot[victim] = -1
-                self.stats["evictions"] += 1
-            self.cache_np[slot] = self._host[s]
-            if self.quant != "none":
-                self.cache_scale_np[slot] = self._host_scale[s]
-            self._shard_slot[s] = slot
-            self._slot_shard[slot] = s
-            self._lru[s] = slot
-            self._lru.move_to_end(s)
-            self._dev_stale.add(slot)
-            self.stats["fills"] += 1
+                if self._free:
+                    slot = self._free.pop()
+                else:
+                    victim = next(
+                        (sh for sh in self._lru if sh not in pinned), None
+                    )
+                    if victim is None:  # whole cache pinned by this batch
+                        continue
+                    slot = self._lru.pop(victim)
+                    self._writeback_slot(slot)
+                    self._shard_slot[victim] = -1
+                    self.stats["evictions"] += 1
+                    evictions += 1
+                self.cache_np[slot] = self._host[s]
+                if self.quant != "none":
+                    self.cache_scale_np[slot] = self._host_scale[s]
+                self._shard_slot[s] = slot
+                self._slot_shard[slot] = s
+                self._lru[s] = slot
+                self._lru.move_to_end(s)
+                self._dev_stale.add(slot)
+                self.stats["fills"] += 1
+                fills += 1
+        if fills:
+            obs.counter("memstore.fills").inc(fills)
+            obs.histogram("memstore.fill_s").observe(
+                time.perf_counter() - t0
+            )
+        if evictions:
+            obs.counter("memstore.evictions").inc(evictions)
 
     def _map(self, flat_idx: np.ndarray, *, count: bool = True,
              valid_elems: int | None = None):
@@ -272,12 +294,19 @@ class TieredValueStore:
         mask = slot >= 0
         if count:
             v = slice(None) if valid_elems is None else slice(0, valid_elems)
-            self.last_access = flat_idx  # feeds prefetch_last()
-            self.stats["lookups"] += 1
-            self.stats["hits"] += int(resident_before[v].sum())
-            self.stats["misses"] += int((~resident_before[v] & mask[v]).sum())
-            self.stats["uncached"] += int((~mask[v]).sum())
-            np.add.at(self.shard_access, shard[v], 1)
+            hits = int(resident_before[v].sum())
+            misses = int((~resident_before[v] & mask[v]).sum())
+            uncached = int((~mask[v]).sum())
+            with self._lock:
+                self.last_access = flat_idx  # feeds prefetch_last()
+                self.stats["lookups"] += 1
+                self.stats["hits"] += hits
+                self.stats["misses"] += misses
+                self.stats["uncached"] += uncached
+                np.add.at(self.shard_access, shard[v], 1)
+            obs.counter("memstore.hits").inc(hits)
+            obs.counter("memstore.misses").inc(misses)
+            obs.counter("memstore.uncached").inc(uncached)
         return shard, row, slot.astype(np.int64), mask
 
     def prefetch(self, idx, *, sync_device: bool = True) -> None:
@@ -315,27 +344,38 @@ class TieredValueStore:
     # ------------------------------------------------------- device mirror
 
     def _sync_device(self) -> None:
-        if self._cache_dev is None:
-            self._cache_dev = jnp.asarray(self.cache_np)
-            self.stats["fill_bytes"] += self.cache_np.nbytes
-            if self.quant != "none":
-                self._scale_dev = jnp.asarray(self.cache_scale_np)
-                self.stats["fill_bytes"] += self.cache_scale_np.nbytes
-            self._dev_stale.clear()
-            return
-        if not self._dev_stale:
-            return
-        slots = np.fromiter(sorted(self._dev_stale), np.int32)
-        block = jnp.asarray(self.cache_np[slots])  # one stacked host->device
-        self._cache_dev = self._cache_dev.at[jnp.asarray(slots)].set(block)
-        self.stats["fill_bytes"] += self.cache_np[slots].nbytes
-        if self.quant != "none":
-            sblock = jnp.asarray(self.cache_scale_np[slots])
-            self._scale_dev = self._scale_dev.at[jnp.asarray(slots)].set(
-                sblock
-            )
-            self.stats["fill_bytes"] += self.cache_scale_np[slots].nbytes
-        self._dev_stale.clear()
+        t0 = time.perf_counter()
+        with self._lock:
+            if self._cache_dev is None:
+                self._cache_dev = jnp.asarray(self.cache_np)
+                synced = self.cache_np.nbytes
+                if self.quant != "none":
+                    self._scale_dev = jnp.asarray(self.cache_scale_np)
+                    synced += self.cache_scale_np.nbytes
+                self._dev_stale.clear()
+                self.stats["fill_bytes"] += synced
+            elif not self._dev_stale:
+                return
+            else:
+                slots = np.fromiter(sorted(self._dev_stale), np.int32)
+                # one stacked host->device copy
+                block = jnp.asarray(self.cache_np[slots])
+                self._cache_dev = self._cache_dev.at[
+                    jnp.asarray(slots)
+                ].set(block)
+                synced = self.cache_np[slots].nbytes
+                if self.quant != "none":
+                    sblock = jnp.asarray(self.cache_scale_np[slots])
+                    self._scale_dev = self._scale_dev.at[
+                        jnp.asarray(slots)
+                    ].set(sblock)
+                    synced += self.cache_scale_np[slots].nbytes
+                self._dev_stale.clear()
+                self.stats["fill_bytes"] += synced
+        obs.counter("memstore.fill_bytes").inc(synced)
+        obs.histogram("memstore.device_sync_s").observe(
+            time.perf_counter() - t0
+        )
 
     @property
     def cache_dev(self) -> jax.Array:
@@ -446,25 +486,29 @@ class TieredValueStore:
         upd = -self.writeback_lr * np.asarray(wg, np.float32).reshape(
             -1, self.m
         )
-        if self.quant != "none":
-            self._apply_writeback_quant(flat, upd)
-            self.stats["writebacks"] += 1
-            return
-        shard, row = self._split(flat)
-        slot = self._shard_slot[shard].astype(np.int64)
-        mask = slot >= 0
-        if mask.any():
-            np.add.at(self.cache_np, (slot[mask], row[mask]), upd[mask])
-            touched = set(np.unique(slot[mask]).tolist())
-            self._dirty |= touched
-            self._dev_stale |= touched
-        if not mask.all():
-            inv = ~mask
-            np.add.at(
-                self._host, (shard[inv], row[inv]),
-                upd[inv].astype(self._host.dtype),
-            )
-        self.stats["writebacks"] += 1
+        with self._lock:
+            if self.quant != "none":
+                self._apply_writeback_quant(flat, upd)
+                self.stats["writebacks"] += 1
+            else:
+                shard, row = self._split(flat)
+                slot = self._shard_slot[shard].astype(np.int64)
+                mask = slot >= 0
+                if mask.any():
+                    np.add.at(
+                        self.cache_np, (slot[mask], row[mask]), upd[mask]
+                    )
+                    touched = set(np.unique(slot[mask]).tolist())
+                    self._dirty |= touched
+                    self._dev_stale |= touched
+                if not mask.all():
+                    inv = ~mask
+                    np.add.at(
+                        self._host, (shard[inv], row[inv]),
+                        upd[inv].astype(self._host.dtype),
+                    )
+                self.stats["writebacks"] += 1
+        obs.counter("memstore.writebacks").inc()
 
     def _apply_writeback_quant(self, flat: np.ndarray,
                                upd: np.ndarray) -> None:
@@ -522,10 +566,11 @@ class TieredValueStore:
 
     def flush(self) -> None:
         """Write every dirty cached shard back to its host shard."""
-        for slot in sorted(self._dirty):
-            self._flush_slot_to_host(slot)
-            self.stats["dirty_writebacks"] += 1
-        self._dirty.clear()
+        with self._lock:
+            for slot in sorted(self._dirty):
+                self._flush_slot_to_host(slot)
+                self.stats["dirty_writebacks"] += 1
+            self._dirty.clear()
 
     # ---------------------------------------------------------- checkpoint
 
@@ -633,33 +678,34 @@ class TieredValueStore:
         if parents.size and (parents.min() < 0
                              or parents.max() >= self.num_rows):
             raise ValueError("parent row ids must index the old table")
-        payload, scales = self._read_rows_raw(parents)
-        new_shards = delta // self.shard_rows
-        pay3 = payload.reshape(new_shards, self.shard_rows, self.m)
-        sc2 = (scales.reshape(new_shards, self.shard_rows)
-               if scales is not None else None)
-        old_host, old_scale = self._host, self._host_scale
-        old_n_shards = self.num_shards
-        self.num_rows = new_num_rows
-        self.num_shards += new_shards
-        if self.spec.backing == "ram":
-            self._host = np.concatenate([old_host, pay3])
-            if self.quant != "none":
-                self._host_scale = np.concatenate([old_scale, sc2])
-        else:  # mmap: a fresh file at the new shape (name encodes rows)
-            self._host, self._host_scale = self._alloc_host()
-            self._host[:old_n_shards] = old_host
-            self._host[old_n_shards:] = pay3
-            if self.quant != "none":
-                self._host_scale[:old_n_shards] = old_scale
-                self._host_scale[old_n_shards:] = sc2
-        self._shard_slot = np.concatenate([
-            self._shard_slot, np.full(new_shards, -1, np.int32)
-        ])
-        self.shard_access = np.concatenate([
-            self.shard_access, np.zeros(new_shards, np.int64)
-        ])
-        self.last_access = None  # old access ids stay valid, but re-prime
+        with self._lock:
+            payload, scales = self._read_rows_raw(parents)
+            new_shards = delta // self.shard_rows
+            pay3 = payload.reshape(new_shards, self.shard_rows, self.m)
+            sc2 = (scales.reshape(new_shards, self.shard_rows)
+                   if scales is not None else None)
+            old_host, old_scale = self._host, self._host_scale
+            old_n_shards = self.num_shards
+            self.num_rows = new_num_rows
+            self.num_shards += new_shards
+            if self.spec.backing == "ram":
+                self._host = np.concatenate([old_host, pay3])
+                if self.quant != "none":
+                    self._host_scale = np.concatenate([old_scale, sc2])
+            else:  # mmap: a fresh file at the new shape (name encodes rows)
+                self._host, self._host_scale = self._alloc_host()
+                self._host[:old_n_shards] = old_host
+                self._host[old_n_shards:] = pay3
+                if self.quant != "none":
+                    self._host_scale[:old_n_shards] = old_scale
+                    self._host_scale[old_n_shards:] = sc2
+            self._shard_slot = np.concatenate([
+                self._shard_slot, np.full(new_shards, -1, np.int32)
+            ])
+            self.shard_access = np.concatenate([
+                self.shard_access, np.zeros(new_shards, np.int64)
+            ])
+            self.last_access = None  # old ids stay valid, but re-prime
 
     def row_stats(self) -> tuple[np.ndarray, int]:
         """(per-shard access counts, rows per shard) — the store-side input
@@ -669,12 +715,13 @@ class TieredValueStore:
     # --------------------------------------------------------------- stats
 
     def reset_stats(self) -> None:
-        self.shard_access[:] = 0
-        self.stats = {
-            "lookups": 0, "hits": 0, "misses": 0, "uncached": 0,
-            "fills": 0, "evictions": 0, "writebacks": 0,
-            "dirty_writebacks": 0, "fill_bytes": 0,
-        }
+        with self._lock:
+            self.shard_access[:] = 0
+            self.stats = {
+                "lookups": 0, "hits": 0, "misses": 0, "uncached": 0,
+                "fills": 0, "evictions": 0, "writebacks": 0,
+                "dirty_writebacks": 0, "fill_bytes": 0,
+            }
 
     def bytes_per_entry(self) -> int:
         """Host-tier storage bytes per table row (payload + scale)."""

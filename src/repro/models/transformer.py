@@ -449,8 +449,20 @@ def forward(params, state, batch, cfg: ModelConfig, *, train: bool = False,
 # Loss
 # ---------------------------------------------------------------------------
 
-def loss_fn(params, state, batch, cfg: ModelConfig, *, train: bool = True):
-    logits, new_state, aux = forward(params, state, batch, cfg, train=train)
+def loss_fn(params, state, batch, cfg: ModelConfig, *, train: bool = True,
+            collect_access: bool = False):
+    """Scalar loss + aux.  `collect_access=True` additionally returns the
+    memory-access dict {seg: (idx, w)} from the forward pass (the
+    telemetry train step scatter-adds `idx` into its usage counters)."""
+    if collect_access:
+        logits, new_state, aux, accesses = forward(
+            params, state, batch, cfg, train=train, collect_access=True
+        )
+    else:
+        logits, new_state, aux = forward(
+            params, state, batch, cfg, train=train
+        )
+        accesses = None
     labels = batch["labels"]
     valid = labels != IGNORE
     safe_labels = jnp.where(valid, labels, 0)
@@ -460,6 +472,8 @@ def loss_fn(params, state, batch, cfg: ModelConfig, *, train: bool = True):
     xent = -(tok_ll * valid).sum() / denom
     loss = xent + cfg.router_aux_weight * aux
     metrics = {"xent": xent, "aux": aux, "ntokens": denom}
+    if collect_access:
+        return loss, (new_state, metrics, accesses)
     return loss, (new_state, metrics)
 
 

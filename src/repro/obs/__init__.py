@@ -1,0 +1,154 @@
+"""Unified observability: metrics registry, span tracer, exporters.
+
+The cross-cutting measurement layer every subsystem instruments against
+(docs/observability.md):
+
+* `registry` — process-wide `MetricsRegistry` (counters, gauges,
+  fixed-bucket histograms; `repro.obs.registry` also holds the jit-safe
+  device-side accumulators drained at step/tick boundaries).
+* `trace` — `Tracer`/`Span`: parent-linked wall-time spans with attached
+  counter deltas, optional `jax.profiler` capture for marked spans.
+* `export` — append-only JSONL event log + Prometheus textfile snapshot,
+  both schema-validated; `metrics_doc` is the summary-document field
+  `tools/check_bench.py` gates on.
+
+**Off by default, and off means free**: until `configure()` runs, every
+`counter()`/`gauge()`/`histogram()` call returns a shared null metric and
+`span()` a shared null context — pure host-side no-ops, zero jitted
+device work, bit-identical numerics (tests/test_obs.py asserts both).
+The launch CLIs arm it via `--metrics-dir` (and `--profile-dir` for
+profiler capture of marked spans).
+
+Instrumentation pattern (call sites fetch through the module so a late
+`configure()` is picked up):
+
+    from repro import obs
+    obs.counter("memstore.fills").inc()
+    with obs.span("serve.decode_tick", tick=t):
+        ...
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+
+from repro.obs import export as export  # noqa: F401  (public submodule)
+from repro.obs.export import (  # noqa: F401
+    JsonlExporter,
+    metrics_doc as _metrics_doc,
+    prometheus_text,
+    read_jsonl,
+    validate_event,
+    validate_metrics_doc,
+    write_prometheus,
+)
+from repro.obs.registry import (  # noqa: F401
+    LATENCY_BUCKETS_S,
+    MetricsRegistry,
+    NULL_METRIC,
+    accum_add,
+    accum_init,
+    hist_bucket_add,
+)
+from repro.obs.trace import NULL_TRACER, Span, Tracer  # noqa: F401
+
+_lock = threading.Lock()
+_registry = MetricsRegistry(enabled=False)
+_tracer = NULL_TRACER
+_exporter: JsonlExporter | None = None
+_metrics_dir: str | None = None
+
+JSONL_NAME = "metrics.jsonl"
+PROM_NAME = "metrics.prom"
+
+
+def registry() -> MetricsRegistry:
+    """The process-wide registry (disabled until `configure()`)."""
+    return _registry
+
+
+def tracer():
+    return _tracer
+
+
+def enabled() -> bool:
+    return _registry.enabled
+
+
+def counter(name: str, help: str = ""):
+    return _registry.counter(name, help)
+
+
+def gauge(name: str, help: str = ""):
+    return _registry.gauge(name, help)
+
+
+def histogram(name: str, help: str = "", buckets=LATENCY_BUCKETS_S):
+    return _registry.histogram(name, help, buckets)
+
+
+def span(name: str, **attrs):
+    """Open a span on the process tracer (no-op context until configured)."""
+    return _tracer.span(name, **attrs)
+
+
+def emit_event(name: str, **attrs) -> None:
+    """Stream a lifecycle event to the JSONL log (dropped when off)."""
+    if _exporter is not None:
+        _exporter.write_event(name, **attrs)
+
+
+def configure(*, metrics_dir: str | None = None,
+              profile_dir: str | None = None,
+              enabled: bool = True) -> MetricsRegistry:
+    """Arm (or re-arm) the process observability state.
+
+    `metrics_dir` activates the exporters: spans stream to
+    `<dir>/metrics.jsonl` as they finish, and `flush()` (or process
+    helpers like the launch CLIs at exit) snapshots the registry there
+    plus a `<dir>/metrics.prom` Prometheus textfile.  Without a dir the
+    registry/tracer still run in memory (reports, tests).
+    `profile_dir` arms `jax.profiler` capture for `span(..., profile=True)`.
+    """
+    global _registry, _tracer, _exporter, _metrics_dir
+    with _lock:
+        if _exporter is not None:
+            _exporter.close()
+        _registry = MetricsRegistry(enabled=enabled)
+        _exporter = None
+        _metrics_dir = None
+        if not enabled:
+            _tracer = NULL_TRACER
+            return _registry
+        on_finish = None
+        if metrics_dir is not None:
+            os.makedirs(metrics_dir, exist_ok=True)
+            _metrics_dir = metrics_dir
+            _exporter = JsonlExporter(os.path.join(metrics_dir, JSONL_NAME))
+            on_finish = _exporter.write_span
+        _tracer = Tracer(_registry, profile_dir=profile_dir,
+                         on_finish=on_finish)
+        return _registry
+
+
+def disable() -> None:
+    """Back to the zero-overhead default (tests; idempotent)."""
+    configure(enabled=False)
+
+
+def flush() -> None:
+    """Write the current registry to the exporters: a `metrics` JSONL
+    snapshot event + the Prometheus textfile.  Safe to call repeatedly
+    (each flush appends one snapshot and rewrites the textfile)."""
+    with _lock:
+        if _exporter is not None:
+            _exporter.write_snapshot(_registry)
+        if _metrics_dir is not None:
+            write_prometheus(_registry,
+                             os.path.join(_metrics_dir, PROM_NAME))
+
+
+def metrics_doc() -> dict:
+    """The summary-document `metrics` field for the current state."""
+    return _metrics_doc(_registry, spans=_tracer.span_count())

@@ -1,0 +1,292 @@
+"""Process-wide metrics registry: counters, gauges, fixed-bucket histograms.
+
+Three rules shape the design:
+
+1. **Disabled means free.**  A disabled registry hands every caller the
+   same null-metric singletons whose mutators are empty methods — call
+   sites instrument unconditionally (`obs.counter("x").inc()`), and the
+   off path costs one dict lookup + one no-op call, with *zero* jitted
+   device work (nothing here ever enters a traced function unless the
+   caller opts into the device accumulators below).
+2. **Host metrics are thread-safe.**  Store fills run on prefetch worker
+   threads and io_callback bodies run on the XLA callback pool, so every
+   mutator takes the metric's lock.  Snapshots are consistent per metric,
+   not across metrics — good enough for monitoring.
+3. **Device-side accumulation drains at boundaries.**  Inside jit, use the
+   pure helpers (`accum_init`/`accum_add`/`hist_bucket_add` — the
+   `repro.memctl.telemetry_update` segment-sum pattern: one `.at[].add`),
+   carry the accumulator like optimizer state, and drain it into the host
+   registry at step/tick boundaries (`Histogram.merge_counts`,
+   `Counter.inc`).  The traced graph never holds a host metric.
+
+Metric names are dotted (`serve.decode_step_s`, `memstore.fill_bytes`);
+the Prometheus exporter rewrites dots to underscores.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from typing import Any, Sequence
+
+import jax.numpy as jnp
+
+# log-ish spaced seconds: 100us .. 10s — the default latency buckets
+LATENCY_BUCKETS_S = (
+    0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025,
+    0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+)
+
+
+class Counter:
+    """Monotonically increasing value (`.inc`)."""
+
+    __slots__ = ("name", "help", "_value", "_lock")
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, v: float = 1.0) -> None:
+        if v < 0:
+            raise ValueError(f"counter {self.name}: negative increment {v}")
+        with self._lock:
+            self._value += v
+
+    def get(self) -> float:
+        return self._value
+
+    def snapshot(self) -> dict[str, Any]:
+        return {"kind": self.kind, "value": self._value}
+
+
+class Gauge:
+    """Last-write-wins value (`.set` / `.add`)."""
+
+    __slots__ = ("name", "help", "_value", "_lock")
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v)
+
+    def add(self, v: float) -> None:
+        with self._lock:
+            self._value += float(v)
+
+    def get(self) -> float:
+        return self._value
+
+    def snapshot(self) -> dict[str, Any]:
+        return {"kind": self.kind, "value": self._value}
+
+
+class Histogram:
+    """Fixed-bucket histogram: counts per bucket, +Inf overflow, sum."""
+
+    __slots__ = ("name", "help", "bounds", "_counts", "_sum", "_lock")
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 buckets: Sequence[float] = LATENCY_BUCKETS_S):
+        bounds = tuple(float(b) for b in buckets)
+        if not bounds or any(b1 <= b0 for b0, b1 in zip(bounds, bounds[1:])):
+            raise ValueError(
+                f"histogram {name}: buckets must be non-empty and "
+                f"strictly increasing, got {bounds}"
+            )
+        self.name = name
+        self.help = help
+        self.bounds = bounds
+        self._counts = [0] * (len(bounds) + 1)  # last = +Inf overflow
+        self._sum = 0.0
+        self._lock = threading.Lock()
+
+    def _bucket(self, v: float) -> int:
+        # first bound >= v (cumulative `le` semantics, like Prometheus)
+        for i, b in enumerate(self.bounds):
+            if v <= b:
+                return i
+        return len(self.bounds)
+
+    def observe(self, v: float) -> None:
+        i = self._bucket(float(v))
+        with self._lock:
+            self._counts[i] += 1
+            self._sum += float(v)
+
+    def merge_counts(self, counts, total: float = 0.0) -> None:
+        """Drain a device-side accumulator (`hist_bucket_add` carry, or any
+        per-bucket count vector of length len(bounds)+1) into this host
+        histogram.  `total` adds to the running sum (pass the accumulated
+        value sum when the caller tracked it)."""
+        counts = [int(c) for c in counts]
+        if len(counts) != len(self._counts):
+            raise ValueError(
+                f"histogram {self.name}: expected {len(self._counts)} "
+                f"bucket counts, got {len(counts)}"
+            )
+        with self._lock:
+            for i, c in enumerate(counts):
+                self._counts[i] += c
+            self._sum += float(total)
+
+    @property
+    def count(self) -> int:
+        return sum(self._counts)
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    def quantile(self, q: float) -> float:
+        """Bucket-upper-bound estimate of the q-quantile (0..1)."""
+        total = self.count
+        if not total:
+            return 0.0
+        rank = q * total
+        acc = 0
+        for i, c in enumerate(self._counts):
+            acc += c
+            if acc >= rank:
+                return (self.bounds[i] if i < len(self.bounds)
+                        else math.inf)
+        return math.inf
+
+    def snapshot(self) -> dict[str, Any]:
+        return {
+            "kind": self.kind,
+            "buckets": list(self.bounds),
+            "counts": list(self._counts),
+            "sum": self._sum,
+            "count": self.count,
+        }
+
+
+class _NullMetric:
+    """Shared do-nothing metric: what a disabled registry hands out."""
+
+    __slots__ = ()
+    name = "<disabled>"
+    help = ""
+    bounds = LATENCY_BUCKETS_S
+    count = 0
+    sum = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        pass
+
+    def set(self, v: float) -> None:
+        pass
+
+    def add(self, v: float) -> None:
+        pass
+
+    def observe(self, v: float) -> None:
+        pass
+
+    def merge_counts(self, counts, total: float = 0.0) -> None:
+        pass
+
+    def get(self) -> float:
+        return 0.0
+
+    def quantile(self, q: float) -> float:
+        return 0.0
+
+
+NULL_METRIC = _NullMetric()
+
+
+class MetricsRegistry:
+    """Name -> metric map.  `enabled=False` is the hard off-switch: every
+    factory returns `NULL_METRIC` and `snapshot()` is empty."""
+
+    def __init__(self, *, enabled: bool = True):
+        self.enabled = enabled
+        self._metrics: dict[str, Any] = {}
+        self._lock = threading.Lock()
+
+    def _get_or_create(self, name: str, cls, **kw):
+        if not self.enabled:
+            return NULL_METRIC
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name, **kw)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise ValueError(
+                    f"metric {name!r} already registered as {m.kind}, "
+                    f"requested {cls.kind}"
+                )
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get_or_create(name, Counter, help=help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get_or_create(name, Gauge, help=help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Sequence[float] = LATENCY_BUCKETS_S) -> Histogram:
+        return self._get_or_create(name, Histogram, help=help,
+                                   buckets=buckets)
+
+    def metrics(self) -> list[Any]:
+        with self._lock:
+            return list(self._metrics.values())
+
+    def counter_values(self) -> dict[str, float]:
+        """Current counter totals (the span tracer's delta snapshot)."""
+        with self._lock:
+            return {n: m.get() for n, m in self._metrics.items()
+                    if isinstance(m, Counter)}
+
+    def snapshot(self) -> dict[str, dict[str, Any]]:
+        with self._lock:
+            items = list(self._metrics.items())
+        return {n: m.snapshot() for n, m in items}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._metrics.clear()
+
+
+# ---------------------------------------------------------------------------
+# device-side accumulators (pure, jit-safe; drain at host boundaries)
+# ---------------------------------------------------------------------------
+
+def accum_init(bins: int):
+    """Zeroed device-side scatter-add accumulator (carry it like
+    optimizer state through the jitted step)."""
+    return jnp.zeros(bins, jnp.float32)
+
+
+def accum_add(acc, idx, w=None):
+    """One observation step: `acc.at[idx].add(w or 1)` — the
+    `telemetry_update` segment-sum pattern.  Pure and jit-safe."""
+    flat = jnp.reshape(jnp.asarray(idx), (-1,)).astype(jnp.int32)
+    if w is None:
+        return acc.at[flat].add(1.0)
+    wf = jnp.reshape(jnp.asarray(w), (-1,)).astype(jnp.float32)
+    return acc.at[flat].add(wf)
+
+
+def hist_bucket_add(acc, values, bounds: Sequence[float]):
+    """Device-side histogram step: bucket `values` by the static `bounds`
+    (cumulative `le` semantics) and scatter-add into `acc`, which must
+    have `len(bounds) + 1` slots (`accum_init(len(bounds) + 1)`).  Drain
+    with `Histogram.merge_counts(np.asarray(acc))`."""
+    v = jnp.reshape(jnp.asarray(values), (-1,)).astype(jnp.float32)
+    b = jnp.searchsorted(jnp.asarray(bounds, jnp.float32), v, side="left")
+    return acc.at[b].add(1.0)

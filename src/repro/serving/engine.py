@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import lookup
 from repro.core import overlay as overlay_ctx
 from repro.models import transformer
@@ -187,6 +188,7 @@ class EngineReport:
         return {
             "arch": arch,
             "mode": self.mode,
+            "metrics": obs.metrics_doc(),
             "rows": self.rows(),
             "per_step_ms": [round(1e3 * s, 3) for s in self.step_s],
             "decode_median_ms": round(1e3 * _percentile(self.step_s, 50), 2),
@@ -393,22 +395,26 @@ class ServeEngine:
         tokens = np.zeros((1, bucket), np.int32)
         tokens[0, :s] = req.prompt
         t0 = time.perf_counter()
-        if self.overlays is None:
-            logits, sub_cache = self._prefill(jnp.asarray(tokens))
-        else:
-            # bind the request's tenant before prefill so the prompt
-            # already reads through the tenant's overlay rows; the
-            # batch=1 pack slice has a constant shape across slots
-            self.overlays.attach(slot_index, req.tenant_id,
-                                 tick=self.ticks)
-            b = slot_index
-            logits, sub_cache = self._prefill(
-                jnp.asarray(tokens),
-                jnp.asarray(self.overlays.ids[:, b:b + 1]),
-                jnp.asarray(self.overlays.deltas[:, b:b + 1]),
-            )
-        first_logits = np.asarray(logits[0, s - 1])
+        with obs.span("serve.prefill", request=req.id, prompt_len=s,
+                      bucket=bucket):
+            if self.overlays is None:
+                logits, sub_cache = self._prefill(jnp.asarray(tokens))
+            else:
+                # bind the request's tenant before prefill so the prompt
+                # already reads through the tenant's overlay rows; the
+                # batch=1 pack slice has a constant shape across slots
+                self.overlays.attach(slot_index, req.tenant_id,
+                                     tick=self.ticks)
+                b = slot_index
+                logits, sub_cache = self._prefill(
+                    jnp.asarray(tokens),
+                    jnp.asarray(self.overlays.ids[:, b:b + 1]),
+                    jnp.asarray(self.overlays.deltas[:, b:b + 1]),
+                )
+            first_logits = np.asarray(logits[0, s - 1])
         prefill_s = time.perf_counter() - t0
+        obs.counter("serve.admitted").inc()
+        obs.histogram("serve.prefill_s").observe(prefill_s)
         first_tok = int(np.argmax(first_logits))
         return _Slot(
             request=req, pos=s, generated=[first_tok], admit_s=now,
@@ -418,6 +424,8 @@ class ServeEngine:
     def _finish(self, slot: _Slot, now: float) -> FinishedRequest:
         st = slot.stats
         total = sum(st.values())
+        obs.counter("serve.retired").inc()
+        obs.histogram("serve.request_latency_s").observe(now - slot.admit_s)
         return FinishedRequest(
             id=slot.request.id,
             prompt_len=slot.request.prompt_len,
@@ -439,7 +447,19 @@ class ServeEngine:
     # ------------------------------------------------------------- run loop
 
     def run(self, requests: list[Request]) -> EngineReport:
-        """Replay a request trace to completion and report."""
+        """Replay a request trace to completion and report.
+
+        The whole replay runs under a `serve.run` span (marked for
+        `jax.profiler` capture when `--profile-dir` armed the tracer);
+        each admission opens `serve.admit` > `serve.prefill` and each
+        pool-wide step a `serve.decode_tick` span, so an exported trace
+        shows per-tick wall time with the store fills/hits that tick
+        caused attached as counter deltas."""
+        with obs.span("serve.run", profile=True,
+                      mode=self.engine_cfg.mode, requests=len(requests)):
+            return self._run(requests)
+
+    def _run(self, requests: list[Request]) -> EngineReport:
         B = self.engine_cfg.slots
         static = self.engine_cfg.mode == "static"
         queue = RequestQueue(requests)
@@ -467,10 +487,12 @@ class ServeEngine:
                     req = queue.pop_ready(now)
                     if req is None:
                         break
-                    slot, sub_cache = self._admit(req, now, b)
-                    self.cache = self._write_slot(
-                        self.cache, sub_cache, jnp.int32(b)
-                    )
+                    with obs.span("serve.admit", request=req.id,
+                                  slot=b, tick=self.ticks):
+                        slot, sub_cache = self._admit(req, now, b)
+                        self.cache = self._write_slot(
+                            self.cache, sub_cache, jnp.int32(b)
+                        )
                     prefill_s.append(slot.prefill_s)
                     generated += 1  # first token comes from the prefill
                     # prefill stat delta belongs to the admitted request
@@ -498,19 +520,26 @@ class ServeEngine:
 
             # -- one fixed-shape decode tick over the whole pool
             t_step = time.perf_counter()
-            if self.overlays is None:
-                logits, self.cache = self._decode(
-                    jnp.asarray(tok_buf), jnp.asarray(pos_buf), self.cache
-                )
-                access = None
-            else:
-                logits, self.cache, access = self._decode(
-                    jnp.asarray(tok_buf), jnp.asarray(pos_buf), self.cache,
-                    jnp.asarray(self.overlays.ids),
-                    jnp.asarray(self.overlays.deltas),
-                )
-            next_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-            step_s.append(time.perf_counter() - t_step)
+            with obs.span("serve.decode_tick", tick=self.ticks,
+                          active=len(active)):
+                if self.overlays is None:
+                    logits, self.cache = self._decode(
+                        jnp.asarray(tok_buf), jnp.asarray(pos_buf),
+                        self.cache
+                    )
+                    access = None
+                else:
+                    logits, self.cache, access = self._decode(
+                        jnp.asarray(tok_buf), jnp.asarray(pos_buf),
+                        self.cache,
+                        jnp.asarray(self.overlays.ids),
+                        jnp.asarray(self.overlays.deltas),
+                    )
+                next_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            dt_step = time.perf_counter() - t_step
+            step_s.append(dt_step)
+            obs.histogram("serve.decode_step_s").observe(dt_step)
+            obs.counter("serve.tokens").inc(len(active))
             self.ticks += 1
 
             # decode-step writeback: fold this tick's lattice accesses
@@ -523,6 +552,7 @@ class ServeEngine:
                         b, idx_a[:, b, 0], w_a[:, b, 0], y_a[:, b, 0],
                         tick=self.ticks,
                     )
+                obs.counter("serve.overlay_writebacks").inc(len(active))
 
             # per-request attribution of this tick's cache-stat deltas
             if self.stores:
@@ -552,10 +582,13 @@ class ServeEngine:
                 tok_buf[b, 0] = int(next_tok[b])
                 pos_buf[b] = sl.pos
                 if self._done(sl):
-                    finished.append(self._finish(sl, now))
-                    slots[b] = None
-                    if self.overlays is not None:
-                        self.overlays.detach(b)  # retire frees the overlay
+                    with obs.span("serve.retire", request=sl.request.id,
+                                  slot=b, tick=self.ticks):
+                        finished.append(self._finish(sl, now))
+                        slots[b] = None
+                        if self.overlays is not None:
+                            # retire frees the overlay
+                            self.overlays.detach(b)
 
         wall = time.perf_counter() - t0
         cache_summary = None

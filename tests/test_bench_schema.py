@@ -177,3 +177,69 @@ def test_check_bench_errored_module_fails():
                     ["table9.ERROR", 0.0, "ValueError: boom"]]}
     _, failures = cb.compare(BASE, cur, threshold=1.3)
     assert failures and "errored" in failures[0]
+
+
+# ------------------------------------------------------- metrics doc gate
+
+def _metrics_doc():
+    from repro import obs
+
+    return obs.metrics_doc()
+
+
+def test_validate_summary_checks_metrics_doc_when_present():
+    rows = [["x", 1.5, "d"]]
+    validate_summary({"rows": rows})                      # still optional
+    validate_summary({"rows": rows, "metrics": _metrics_doc()})
+    with pytest.raises(ValueError, match="'metrics' doc invalid"):
+        validate_summary({"rows": rows, "metrics": {"schema": "bogus"}})
+
+
+def test_check_bench_requires_metrics_doc_once_baseline_tracks_one(tmp_path):
+    cb = _load_check_bench()
+    base = {"rows": BASE["rows"], "metrics": _metrics_doc()}
+    cur_ok = {"rows": BASE["rows"], "metrics": _metrics_doc()}
+    _, failures = cb.compare(base, cur_ok, threshold=1.3)
+    assert failures == []
+    cur_missing = {"rows": BASE["rows"]}
+    _, failures = cb.compare(base, cur_missing, threshold=1.3)
+    assert failures and "metrics" in failures[0]
+    # a baseline without one never demands it (pre-refresh compatibility)
+    _, failures = cb.compare(BASE, cur_missing, threshold=1.3)
+    assert failures == []
+    # end-to-end: a schema-invalid doc is rejected at load time
+    base_p = tmp_path / "base.json"
+    cur_p = tmp_path / "cur.json"
+    base_p.write_text(json.dumps(base))
+    cur_p.write_text(json.dumps(
+        {"rows": BASE["rows"], "metrics": {"schema": "bogus"}}
+    ))
+    assert cb.main([str(cur_p), "--baseline", str(base_p)]) == 1
+
+
+def test_committed_baseline_tracks_obs_rows_and_metrics_doc():
+    """The refreshed baseline carries the observability additions: the
+    serving metrics-overhead row, the table5 utilisation rows, and a
+    schema-valid `metrics` doc — so CI gates on all three."""
+    from repro.obs.export import validate_metrics_doc
+
+    with open(os.path.join(REPO, "benchmarks", "baseline.json")) as f:
+        baseline = json.load(f)
+    validate_summary(baseline)
+    names = {r[0] for r in baseline["rows"]}
+    assert "serving_obs_load0" in names
+    assert {"table5.util_dead_frac", "table5.util_hot10_mass",
+            "table5.util_cold_frac"} <= names
+    validate_metrics_doc(baseline["metrics"])
+
+
+@pytest.mark.slow
+def test_table8_emits_obs_overhead_row():
+    from benchmarks import table8_serving
+    from repro import obs
+
+    rows = table8_serving.run(smoke=True)
+    assert not obs.enabled()    # the bench restores the disabled default
+    row = next(r for r in rows if r[0] == "serving_obs_load0")
+    assert row[1] > 0
+    assert "overhead_x=" in row[2]

@@ -21,7 +21,13 @@ runner is uniformly 2x slower, tracked rows only fail when they regress
 bench job calibrates on ``tiering_dense_reference`` (a pure device
 gather, no scheduling/caching behaviour of its own).
 
-Exit status: 0 = no regression, 1 = regression / missing row / bad input.
+Both documents may carry a ``metrics`` key — the final `repro.obs`
+registry snapshot (``repro.obs.v1``).  Schema-invalid docs are rejected at
+load time; once the baseline tracks a ``metrics`` doc, a current run
+without one fails the gate.
+
+Exit status: 0 = clean, 1 = regression / missing row / missing or invalid
+metrics doc / bad input.
 CI wires this into the ``bench`` job (see .github/workflows/ci.yml); to
 refresh the baseline after an intentional perf change, re-run
 ``python -m benchmarks.run <tables> --smoke --out benchmarks/baseline.json``
@@ -37,6 +43,7 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, REPO)
+sys.path.insert(0, os.path.join(REPO, "src"))  # repro.obs for metrics docs
 
 from benchmarks.run import validate_summary  # noqa: E402
 
@@ -100,6 +107,18 @@ def compare(baseline: dict, current: dict, threshold: float,
                   if name.endswith(".ERROR")]
     for name in error_rows:
         failures.append(f"benchmark module errored: {name}")
+    # observability gate: once the baseline carries a `metrics` doc
+    # (repro.obs.v1 registry snapshot), every gated run must too.
+    # Schema validity is enforced at load time (`validate_summary`
+    # delegates to repro.obs.export.validate_metrics_doc); here we catch
+    # the doc going missing — an instrumented layer silently dropping
+    # its telemetry would otherwise pass the latency gate unnoticed.
+    if "metrics" in baseline and "metrics" not in current:
+        failures.append(
+            "summary 'metrics' doc missing from current run (baseline "
+            "tracks one; run benchmarks.run with the repro.obs layer "
+            "present)"
+        )
     return lines, failures
 
 
